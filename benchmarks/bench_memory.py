@@ -1,0 +1,92 @@
+"""Paper Table 1: data-preparation memory — naive in-RAM loading vs
+Trove's mmap'd MaterializedQRel.
+
+Each variant runs in its own subprocess; we report peak RSS minus that
+variant's *import floor* (python+numpy+allocator baseline, measured
+separately — on this container jemalloc's arena floor is ~400 MB, far
+above the workload, so raw peaks would be meaningless).  The dataset is
+a scaled MS-MARCO-like synthetic corpus; the paper's 2.6x factor is the
+target ratio at benchmark scale.
+"""
+
+import os
+import tempfile
+
+from benchmarks.common import emit, peak_rss_of
+
+N_DOCS = 150_000
+N_QUERIES = 8_000
+DOC_LEN = 80
+
+_GEN = f"""
+import os
+from repro.data.synthetic import make_retrieval_dataset
+d = {{dir!r}}
+if not os.path.exists(os.path.join(d, "queries.jsonl")):
+    make_retrieval_dataset(d, n_queries={N_QUERIES}, n_docs={N_DOCS},
+                           n_topics=512, doc_len={DOC_LEN})
+"""
+
+_NAIVE_IMPORTS = "import json\nd = {dir!r}\n"
+
+_NAIVE = """
+# naive: load every record into python dicts (what ad-hoc scripts do)
+queries, corpus, qrels = {}, {}, {}
+with open(d + "/queries.jsonl") as f:
+    for line in f:
+        r = json.loads(line); queries[r["_id"]] = r["text"]
+with open(d + "/corpus.jsonl") as f:
+    for line in f:
+        r = json.loads(line); corpus[r["_id"]] = r["text"]
+with open(d + "/qrels/train.tsv") as f:
+    for line in f:
+        q, doc, s = line.split("\\t")
+        qrels.setdefault(q, {})[doc] = float(s)
+inst = [(queries[q], [corpus[doc] for doc in docs])
+        for q, docs in qrels.items()]
+print("instances", len(inst))
+"""
+
+_TROVE_IMPORTS = """
+from repro.core.config import DataArguments, MaterializedQRelConfig
+from repro.core.datasets import BinaryDataset
+d = {dir!r}
+"""
+
+_TROVE = """
+cfg = MaterializedQRelConfig(qrel_path=d + "/qrels/train.tsv",
+                             query_path=d + "/queries.jsonl",
+                             corpus_path=d + "/corpus.jsonl", min_score=1)
+ds = BinaryDataset(DataArguments(group_size=2), lambda t: t,
+                   lambda t, title="": t, cfg, cfg, cache_root=d + "/cache")
+# touch every training instance once (on-the-fly materialization)
+n = 0
+for i in range(len(ds)):
+    n += len(ds[i]["passages"])
+print("instances", len(ds), n)
+"""
+
+
+def run(out_dir=None):
+    d = out_dir or os.path.join(tempfile.gettempdir(), "trove_bench_mem")
+    os.makedirs(d, exist_ok=True)
+    gen = _GEN.format(dir=d)
+    peak_rss_of(gen)                                  # generate once
+    # warm Trove's table cache so build cost isn't in the measured run
+    peak_rss_of(_TROVE_IMPORTS.format(dir=d) + _TROVE)
+    naive_floor = peak_rss_of(_NAIVE_IMPORTS.format(dir=d))
+    trove_floor = peak_rss_of(_TROVE_IMPORTS.format(dir=d))
+    naive = peak_rss_of(_NAIVE_IMPORTS.format(dir=d) + _NAIVE)
+    trove = peak_rss_of(_TROVE_IMPORTS.format(dir=d) + _TROVE)
+    n_net = max(naive - naive_floor, 1e-3)
+    t_net = max(trove - trove_floor, 1e-3)
+    emit("table1_memory_naive_mb", n_net * 1000,
+         f"{n_net:.0f}MB (floor {naive_floor:.0f}MB)")
+    emit("table1_memory_trove_mb", t_net * 1000,
+         f"{t_net:.0f}MB (floor {trove_floor:.0f}MB)")
+    emit("table1_memory_ratio", 0.0, f"{n_net / t_net:.2f}x reduction")
+    return {"naive_mb": n_net, "trove_mb": t_net}
+
+
+if __name__ == "__main__":
+    run()

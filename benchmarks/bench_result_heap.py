@@ -1,0 +1,47 @@
+"""Paper Table 3: Python heapq vs FastResultHeapq.
+
+Two regimes, as in the paper:
+  * online — small doc chunks (256) arriving during encoding
+  * cached — large chunks (4096+) streamed from the embedding cache
+Reports us/update-call and the speedup factor.
+"""
+
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.result_heap import FastResultHeapq
+
+
+def _bench(impl: str, q: int, k: int, chunk: int, n_chunks: int,
+           iters: int = 3) -> float:
+    rng = np.random.default_rng(0)
+    chunks = [(rng.normal(size=(q, chunk)).astype(np.float32),
+               np.arange(i * chunk, (i + 1) * chunk, dtype=np.int32))
+              for i in range(n_chunks)]
+
+    def run():
+        h = FastResultHeapq(q, k, impl=impl)
+        for s, i in chunks:
+            h.update(s, i)
+        h.finalize()
+
+    us_total = time_call(run, warmup=1, iters=iters)
+    return us_total / n_chunks          # per update call
+
+
+def run():
+    results = {}
+    for regime, (q, chunk, n_chunks) in {
+            "online": (64, 256, 12), "cached": (256, 4096, 6)}.items():
+        k = 100
+        py = _bench("python", q, k, chunk, n_chunks, iters=1)
+        jx = _bench("jax", q, k, chunk, n_chunks)
+        emit(f"table3_heap_python_{regime}", py, f"q={q} chunk={chunk}")
+        emit(f"table3_heap_trove_{regime}", jx,
+             f"speedup={py / jx:.0f}x")
+        results[regime] = py / jx
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,60 @@
+"""Paper Table 2: multi-node inference scaling.
+
+One physical core here, so nodes are *simulated*: the corpus is
+fair-sharded across N virtual nodes and each node's wall time is measured
+sequentially; reported "cluster time" = max(node times) + the O(Q*k)
+merge.  Linear scaling shows up as cluster time ~ 1/N (the paper's
+14:20 -> 7:12 -> 4:48 pattern).
+"""
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.fair_sharding import FairSharder
+from repro.core.result_heap import FastResultHeapq
+
+
+def _encode_like(texts_embs: np.ndarray, lo: int, hi: int, q: np.ndarray,
+                 heap: FastResultHeapq, chunk: int = 512):
+    for off in range(lo, hi, chunk):
+        embs = texts_embs[off: off + chunk]
+        # stand-in for encoder cost: one GEMM comparable to a small tower
+        _ = embs @ np.ones((embs.shape[1], embs.shape[1]), np.float32)
+        heap.update(q @ embs.T,
+                    np.arange(off, off + embs.shape[0], dtype=np.int32))
+
+
+def run(n_docs: int = 60_000, n_q: int = 64, dim: int = 256, k: int = 100):
+    rng = np.random.default_rng(0)
+    corpus = rng.normal(size=(n_docs, dim)).astype(np.float32)
+    q = rng.normal(size=(n_q, dim)).astype(np.float32)
+    base = None
+    results = {}
+    for n_nodes in (1, 2, 3):
+        sharder = FairSharder(n_nodes)
+        bounds = sharder.bounds(n_docs)
+        node_times, heaps = [], []
+        for rank, (lo, hi) in enumerate(bounds):
+            heap = FastResultHeapq(n_q, k)
+            t0 = time.monotonic()
+            _encode_like(corpus, lo, hi, q, heap)
+            heap.finalize()
+            node_times.append(time.monotonic() - t0)
+            heaps.append(heap)
+        t0 = time.monotonic()
+        merged = heaps[0]
+        for h in heaps[1:]:
+            merged.merge(h)
+        merge_t = time.monotonic() - t0
+        cluster = max(node_times) + merge_t
+        base = base or cluster
+        emit(f"table2_inference_{n_nodes}node", cluster * 1e6,
+             f"speedup={base / cluster:.2f}x merge={merge_t * 1e3:.1f}ms")
+        results[n_nodes] = cluster
+    return results
+
+
+if __name__ == "__main__":
+    run()

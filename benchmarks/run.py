@@ -1,0 +1,30 @@
+"""Benchmark harness — one entry per paper table (+ kernel benches).
+
+Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §7 index):
+  Table 1  memory: naive vs Trove data management
+  Table 2  multi-node inference scaling (simulated nodes)
+  Table 3  Python heapq vs FastResultHeapq (online / cached)
+  Table 4  time-to-first-sample, first vs warm run
+  kernels  fused score+top-k HBM-traffic reduction
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (bench_kernels, bench_memory, bench_result_heap,
+                            bench_scaling, bench_ttfs)
+    bench_result_heap.run()
+    bench_scaling.run()
+    bench_ttfs.run()
+    bench_memory.run()
+    bench_kernels.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Graph retrieval: unsupervised GraphSAGE (the arch pool's GNN) trained
+with the real neighbor sampler, embeddings served through the Trove
+evaluator path (FastResultHeapq + fused score+top-k kernel).
+
+    PYTHONPATH=src python examples/graph_retrieval.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.result_heap import FastResultHeapq
+from repro.data.graph import CSRGraph, NeighborSampler, make_random_graph
+from repro.kernels import ops as kops
+from repro.models import gnn
+from repro.models.losses import InfoNCELoss
+from repro.training.optimizer import OptimizerConfig, make_optimizer
+
+N, DEG, F, COMMUNITIES = 400, 12, 16, 8
+rng = np.random.default_rng(0)
+src, dst, comm = make_random_graph(N, DEG, n_communities=COMMUNITIES)
+graph = CSRGraph.from_edges(src, dst, N)
+# features: noisy community indicator
+x = (np.eye(COMMUNITIES)[comm] @ rng.normal(size=(COMMUNITIES, F)) * 0.5
+     + rng.normal(size=(N, F)) * 0.5).astype(np.float32)
+
+cfg = gnn.SAGEConfig(name="example", d_feat=F, d_hidden=32,
+                     fanouts=(8, 4))
+params = gnn.init_params(cfg, jax.random.key(0))
+sampler = NeighborSampler(graph, cfg.fanouts, seed=0)
+loss_fn = InfoNCELoss()
+opt_init, opt_update = make_optimizer(
+    OptimizerConfig(name="adamw", learning_rate=3e-3))
+opt = opt_init(params)
+
+
+@jax.jit
+def step(params, opt, t, a0, a1, a2, p0, p1, p2):
+    def loss(p):
+        za = gnn.forward_minibatch(cfg, p, a0, a1, a2)
+        zp = gnn.forward_minibatch(cfg, p, p0, p1, p2)
+        scores = jnp.einsum("qd,pd->qp", za, zp) / 0.1
+        return loss_fn(scores, jnp.arange(za.shape[0], dtype=jnp.int32))
+
+    l, g = jax.value_and_grad(loss)(params)
+    params, opt = opt_update(g, opt, params, t)
+    return params, opt, l
+
+
+for t in range(60):
+    batch = rng.integers(0, N, 32)
+    pos = sampler.positive_pairs(batch)          # co-occurring neighbors
+    a = sampler.sample_block(x, batch)
+    p = sampler.sample_block(x, pos)
+    params, opt, l = step(params, opt, jnp.asarray(t), *a, *p)
+    if t % 20 == 0:
+        print(f"step {t:3d} loss {float(l):.3f}")
+
+# full-graph embeddings -> node retrieval with the fused Pallas kernel
+z = np.asarray(gnn.forward_full(cfg, params, jnp.asarray(x),
+                                jnp.asarray(src), jnp.asarray(dst)))
+k = 10
+vals, ids = kops.fused_score_topk(jnp.asarray(z[:64]), jnp.asarray(z), k)
+ids = np.asarray(ids)
+# quality: retrieved neighbors should share the query's community
+same = np.mean(comm[ids[:, 1:]] == comm[:64, None])
+rand = 1.0 / COMMUNITIES
+print(f"community purity of top-{k}: {same:.2f} (random {rand:.2f})")
+assert same > rand * 1.5, "graph retrieval should beat random"
+print("graph retrieval OK")

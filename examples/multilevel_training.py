@@ -1,0 +1,84 @@
+"""Paper §4.1 demo: mix multi-level synthetic data, annotated positives
+and mined negatives — each source processed differently on the fly — and
+train list-wise with a *custom* Wasserstein loss registered via _alias
+(the SyCL experiment the paper showcases).
+
+    PYTHONPATH=src python examples/multilevel_training.py
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+
+from repro import (DataArguments, GradedBiEncoderRetriever, HashTokenizer,
+                   MaterializedQRelConfig, MultiLevelDataset,
+                   RetrievalCollator, RetrievalLoss,
+                   RetrievalTrainingArguments, IRMetrics, RetrievalTrainer)
+from repro.data.synthetic import (make_retrieval_dataset,
+                                  make_synthetic_multilevel)
+from repro.models.encoder import DefaultEncoder
+from repro.models.transformer import LMConfig
+
+
+# --- paper §4.1: user-defined loss, selected via --loss=ws ---------------
+class WSLoss(RetrievalLoss):
+    _alias = "ws_example"
+
+    def forward(self, scores, labels):  # paper's sketch keeps forward()
+        from repro.models.losses import WassersteinLoss
+        return WassersteinLoss()(scores, labels)
+
+    __call__ = forward
+
+
+work = tempfile.mkdtemp(prefix="trove_multilevel_")
+queries, corpus, qrels = make_retrieval_dataset(
+    work, n_queries=48, n_docs=192, n_topics=12, graded=True)
+syn_corpus, syn_qrels = make_synthetic_multilevel(work, queries, 192)
+
+# three sources, three different on-the-fly treatments (paper Fig. 1B):
+syn = MaterializedQRelConfig(                      # synthetic levels 0..3
+    qrel_path=syn_qrels, query_path=f"{work}/queries.jsonl",
+    corpus_path=syn_corpus,
+    query_subset_from=f"{work}/qrels/train.tsv")
+pos = MaterializedQRelConfig(                      # annotated positives -> 3
+    min_score=1, new_label=3,
+    qrel_path=f"{work}/qrels/train.tsv",
+    query_path=f"{work}/queries.jsonl", corpus_path=f"{work}/corpus.jsonl")
+neg = MaterializedQRelConfig(                      # 2 random negatives -> 1
+    group_random_k=2, new_label=1,
+    qrel_path=f"{work}/qrels/train.tsv",
+    query_path=f"{work}/queries.jsonl", corpus_path=f"{work}/corpus.jsonl")
+
+data_args = DataArguments(group_size=6, vocab_size=512, query_max_len=16,
+                          passage_max_len=48)
+encoder_cfg = LMConfig(name="multilevel", n_layers=2, d_model=48,
+                       n_heads=4, n_kv_heads=2, head_dim=12, d_ff=96,
+                       vocab_size=512, dtype=jnp.float32, pooling="mean",
+                       remat=False)
+retriever = GradedBiEncoderRetriever(DefaultEncoder(encoder_cfg),
+                                     "ws_example", temperature=0.05)
+dataset = MultiLevelDataset(data_args, retriever.format_query,
+                            retriever.format_passage, [syn, pos, neg],
+                            cache_root=f"{work}/cache")
+collator = RetrievalCollator(data_args, HashTokenizer(512))
+
+trainer = RetrievalTrainer(
+    retriever,
+    RetrievalTrainingArguments(output_dir=f"{work}/run", max_steps=60,
+                               learning_rate=3e-3, warmup_steps=5,
+                               per_device_batch_size=16, log_every=10,
+                               checkpoint_every=50),
+    collator, dataset,
+    dev_dataset=[dataset[i] for i in range(16)],
+    compute_metrics=IRMetrics(("ndcg@10", "mrr@10")))
+trainer.train()
+print("logs:", *trainer.logs, sep="\n  ")
+final = trainer.logs[-1]
+assert final["loss"] < trainer.logs[0]["loss"]
+print(f"graded training OK (ndcg@10 during training: "
+      f"{final.get('ndcg@10'):.3f})")

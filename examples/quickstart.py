@@ -1,0 +1,66 @@
+"""Quickstart (paper Fig. 3): train a dense retriever with mined hard
+negatives in ~40 lines, then evaluate — runnable on CPU in ~2 minutes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+
+from repro import (BinaryDataset, DataArguments, EvaluationArguments,
+                   HashTokenizer, MaterializedQRelConfig, ModelArguments,
+                   RetrievalCollator, RetrievalEvaluator,
+                   RetrievalTrainingArguments, BiEncoderRetriever,
+                   RetrievalTrainer)
+from repro.data.synthetic import make_retrieval_dataset
+from repro.models.transformer import LMConfig
+
+work = tempfile.mkdtemp(prefix="trove_quickstart_")
+queries, corpus, qrels = make_retrieval_dataset(
+    work, n_queries=48, n_docs=192, n_topics=12)
+
+# --- the paper's workflow: config objects -> dataset -> retriever -> trainer
+train_args = RetrievalTrainingArguments(
+    output_dir=os.path.join(work, "run"), max_steps=60,
+    learning_rate=3e-3, per_device_batch_size=16, warmup_steps=5,
+    checkpoint_every=30, log_every=10)
+model_args = ModelArguments(temperature=0.05)
+data_args = DataArguments(group_size=2, vocab_size=512,
+                          query_max_len=16, passage_max_len=48)
+
+tokenizer = HashTokenizer(data_args.vocab_size)
+encoder_cfg = LMConfig(name="quickstart", n_layers=2, d_model=48,
+                       n_heads=4, n_kv_heads=2, head_dim=12, d_ff=96,
+                       vocab_size=512, dtype=jnp.float32, pooling="mean",
+                       remat=False)
+model = BiEncoderRetriever.from_model_args(model_args, encoder_cfg)
+collator = RetrievalCollator(data_args, tokenizer)
+
+pos = MaterializedQRelConfig(min_score=1,
+                             qrel_path=f"{work}/qrels/train.tsv",
+                             query_path=f"{work}/queries.jsonl",
+                             corpus_path=f"{work}/corpus.jsonl")
+neg = MaterializedQRelConfig(group_random_k=2,
+                             qrel_path=f"{work}/qrels/train.tsv",
+                             query_path=f"{work}/queries.jsonl",
+                             corpus_path=f"{work}/corpus.jsonl")
+dataset = BinaryDataset(data_args, model.format_query,
+                        model.format_passage, pos, neg,
+                        cache_root=f"{work}/cache")
+
+trainer = RetrievalTrainer(model, train_args, collator, dataset)
+state = trainer.train()
+print("train logs:", *trainer.logs, sep="\n  ")
+
+evaluator = RetrievalEvaluator(
+    EvaluationArguments(topk=10, metrics=("ndcg@10", "recall@10")),
+    model, collator, state["params"])
+metrics = evaluator.evaluate(queries, corpus, qrels)
+print("final metrics:", metrics)
+assert metrics["ndcg@10"] > 0.25, "expected better-than-random retrieval"
+print("quickstart OK")

@@ -1,0 +1,51 @@
+"""Trove-JAX: a multi-pod dense-retrieval framework (paper: ir-trove).
+
+``from repro import *`` mirrors the paper's ``from trove import *``.
+
+Exports resolve lazily (PEP 562) so that ``python -m repro.launch.dryrun``
+can set XLA_FLAGS before anything imports jax.
+"""
+
+import importlib
+
+_EXPORTS = {
+    "RetrievalCollator": "repro.core.collator",
+    "DataArguments": "repro.core.config",
+    "EvaluationArguments": "repro.core.config",
+    "MaterializedQRelConfig": "repro.core.config",
+    "ModelArguments": "repro.core.config",
+    "RetrievalTrainingArguments": "repro.core.config",
+    "parse_cli": "repro.core.config",
+    "BinaryDataset": "repro.core.datasets",
+    "EncodingDataset": "repro.core.datasets",
+    "MultiLevelDataset": "repro.core.datasets",
+    "EmbeddingCache": "repro.core.embedding_cache",
+    "RetrievalEvaluator": "repro.core.evaluator",
+    "MaterializedQRel": "repro.core.materialized_qrel",
+    "IRMetrics": "repro.core.metrics",
+    "compute_metrics": "repro.core.metrics",
+    "FastResultHeapq": "repro.core.result_heap",
+    "register_loader": "repro.data.loaders",
+    "HashTokenizer": "repro.data.tokenizer",
+    "DefaultEncoder": "repro.models.encoder",
+    "PretrainedEncoder": "repro.models.encoder",
+    "get_encoder": "repro.models.encoder",
+    "RetrievalLoss": "repro.models.losses",
+    "get_loss": "repro.models.losses",
+    "BiEncoderRetriever": "repro.models.retriever",
+    "GradedBiEncoderRetriever": "repro.models.retriever",
+    "PretrainedRetriever": "repro.models.retriever",
+    "RetrievalTrainer": "repro.training.trainer",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return __all__

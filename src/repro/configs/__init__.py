@@ -1,0 +1,39 @@
+"""Architecture registry: ``--arch <id>`` -> Arch object (DESIGN.md §4)."""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_MODULES = {
+    "gemma-7b": "gemma_7b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "stablelm-3b": "stablelm_3b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b_a17b",
+    "graphsage-reddit": "graphsage_reddit",
+    "bst": "bst",
+    "autoint": "autoint",
+    "deepfm": "deepfm",
+    "wide-deep": "wide_deep",
+    "trove-base": "trove_base",
+}
+
+ARCH_NAMES = [n for n in ARCH_MODULES if n != "trove-base"]
+
+
+def get_arch(name: str):
+    if name not in ARCH_MODULES:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{ARCH_MODULES[name]}")
+    return mod.get_arch()
+
+
+def all_cells() -> list[tuple[str, str]]:
+    """The 40 assigned (arch x shape) dry-run cells."""
+    out = []
+    for name in ARCH_NAMES:
+        arch = get_arch(name)
+        for shape in arch.shape_names():
+            out.append((name, shape))
+    return out

@@ -1,0 +1,13 @@
+"""autoint: 39 sparse fields, embed_dim=16, 3 self-attn layers,
+2 heads, d_attn=32 [arXiv:1810.11921]."""
+from repro.configs.base import RecSysArch
+from repro.models.recsys import RecSysConfig
+
+# criteo-like 39-field layout, ~33.6M total rows
+_VOCABS = ((2**24, 2**23, 2**22, 2**22) + (2**16,) * 10 + (2**12,) * 25)
+
+
+def get_arch() -> RecSysArch:
+    return RecSysArch(RecSysConfig(
+        name="autoint", kind="autoint", vocab_sizes=_VOCABS, embed_dim=16,
+        n_attn_layers=3, n_heads=2, d_attn=32))

@@ -1,0 +1,647 @@
+"""Architecture cell construction: (arch x input-shape) -> lowerable step.
+
+Every assigned architecture exposes the same surface:
+
+  * ``abstract_params()`` / ``param_logical_axes()`` / ``axis_rules()``
+  * ``shape_names()`` and ``build_cell(shape, mesh)`` -> :class:`Cell`
+  * ``reduced()`` — a small same-family config for CPU smoke tests,
+    with ``smoke_inputs(rng)`` producing real arrays.
+
+A :class:`Cell` bundles the jit-able step function with sharding-annotated
+``ShapeDtypeStruct`` arguments: ``jax.jit(cell.fn, **cell.jit_kwargs)
+.lower(*cell.abstract_args)`` is exactly the multi-pod dry-run contract.
+
+Step kinds per family (DESIGN.md §4):
+  lm:     train (contrastive bi-encoder fwd+bwd+adafactor update),
+          encode (corpus prefill), serve (1-token decode w/ KV cache)
+  gnn:    train (unsupervised GraphSAGE InfoNCE, full/minibatch/batched)
+  recsys: train (CTR BCE fwd+bwd+adamw), serve (scoring),
+          retrieval (1 user x N candidates + top-k — FastResultHeapq)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.models import gnn as gnn_lib
+from repro.models import recsys as recsys_lib
+from repro.models import transformer as tfm
+from repro.models.losses import BCELoss, InfoNCELoss
+from repro.sharding.partitioning import AxisRules
+from repro.training.optimizer import (OptimizerConfig, clip_by_global_norm,
+                                      make_optimizer)
+
+
+def round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str                       # train | encode | serve | retrieval
+    fn: Callable
+    abstract_args: tuple
+    jit_kwargs: dict
+    notes: str = ""
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+class ShardCtx:
+    """Resolves logical axes -> NamedSharding for one (mesh, rules)."""
+
+    def __init__(self, mesh, rules: AxisRules):
+        self.mesh = mesh
+        self.rules = rules
+
+    def shard(self, tree, axes_tree):
+        if self.mesh is None:
+            return tree
+
+        def one(leaf, axes):
+            spec = self.rules.spec_for(axes, leaf.shape, self.mesh)
+            return _sds(leaf.shape, leaf.dtype,
+                        NamedSharding(self.mesh, spec))
+
+        return jax.tree.map(
+            one, tree, axes_tree,
+            is_leaf=lambda x: isinstance(x, (tuple, list)) and all(
+                isinstance(e, (str, type(None))) for e in x))
+
+    def ctx(self):
+        return (self.mesh, self.rules) if self.mesh is not None else None
+
+
+def make_train_cell(arch_name: str, shape_name: str, *,
+                    loss_fn: Callable, abstract_params, param_axes,
+                    batch_specs, batch_axes, rules: AxisRules, mesh,
+                    optimizer: str = "adafactor", notes: str = "") -> Cell:
+    """fwd + bwd + optimizer update — the full per-step training work."""
+    opt_cfg = OptimizerConfig(name=optimizer, learning_rate=1e-3)
+    opt_init, opt_update = make_optimizer(opt_cfg)
+    sc = ShardCtx(mesh, rules)
+    ctx = sc.ctx()
+
+    def step(state, batch):
+        def loss_of(params):
+            out = loss_fn(params, batch, ctx)
+            return out if not isinstance(out, tuple) else out[0]
+
+        loss, grads = jax.value_and_grad(loss_of)(state["params"])
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.grad_clip)
+        new_params, new_opt = opt_update(
+            grads, state["opt"], state["params"], state["step"])
+        return {"step": state["step"] + 1, "params": new_params,
+                "opt": new_opt}, {"loss": loss, "grad_norm": gnorm}
+
+    abs_state = {
+        "step": _sds((), jnp.int32,
+                     NamedSharding(mesh, P()) if mesh else None),
+        "params": abstract_params,
+        "opt": jax.eval_shape(opt_init, abstract_params),
+    }
+    # shard params + mirror opt
+    abs_state["params"] = sc.shard(abstract_params, param_axes)
+    abs_state["opt"] = _opt_shardings(abs_state["opt"], abstract_params,
+                                      param_axes, sc)
+    abs_batch = sc.shard(batch_specs, batch_axes)
+    return Cell(arch_name, shape_name, "train", step,
+                (abs_state, abs_batch), {"donate_argnums": (0,)}, notes)
+
+
+def _opt_shardings(abs_opt, abstract_params, param_axes, sc: ShardCtx):
+    if sc.mesh is None:
+        return abs_opt
+    if "mu" in abs_opt:
+        return {"mu": sc.shard(abstract_params, param_axes),
+                "nu": sc.shard(abstract_params, param_axes)}
+
+    def fac(p_leaf, axes, v_dict):
+        axes = tuple(axes)
+        out = {}
+        for k, leaf in v_dict.items():
+            if k == "v":
+                a = axes
+            elif k == "vr":
+                a = axes[:-1]
+            else:
+                a = axes[:-2] + axes[-1:]
+            spec = sc.rules.spec_for(a, leaf.shape, sc.mesh)
+            out[k] = _sds(leaf.shape, leaf.dtype,
+                          NamedSharding(sc.mesh, spec))
+        return out
+
+    is_v = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+    return {"v": jax.tree.map(
+        fac, abstract_params, param_axes, abs_opt["v"],
+        is_leaf=lambda x: hasattr(x, "shape") or (
+            isinstance(x, (tuple, list)) and all(
+                isinstance(e, (str, type(None))) for e in x)) or is_v(x))}
+
+
+def make_infer_cell(arch_name, shape_name, kind, fn, abstract_params,
+                    param_axes, batch_specs, batch_axes, rules, mesh,
+                    donate_batch=False, notes="") -> Cell:
+    sc = ShardCtx(mesh, rules)
+    abs_params = sc.shard(abstract_params, param_axes)
+    abs_batch = sc.shard(batch_specs, batch_axes)
+    jit_kwargs = {"donate_argnums": (1,)} if donate_batch else {}
+    return Cell(arch_name, shape_name, kind, fn,
+                (abs_params, abs_batch), jit_kwargs, notes)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="encode", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="serve", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="serve", seq_len=524288, global_batch=1),
+}
+
+
+class LMArch:
+    family = "lm"
+
+    def __init__(self, cfg: tfm.LMConfig, optimizer: str = "adafactor",
+                 shapes: dict | None = None):
+        self.cfg = cfg
+        self.name = cfg.name
+        self.optimizer = optimizer
+        self.shapes = shapes or LM_SHAPES
+
+    def shape_names(self):
+        return list(self.shapes)
+
+    def axis_rules(self):
+        return tfm.LM_RULES
+
+    def variant(self, **overrides) -> "LMArch":
+        """Config-overridden copy (e.g. scan_layers=True for fast
+        multi-pod compile checks, or §Perf hillclimb candidates)."""
+        return LMArch(dataclasses.replace(self.cfg, **overrides),
+                      optimizer=self.optimizer, shapes=self.shapes)
+
+    def abstract_params(self):
+        return tfm.abstract_params(self.cfg)
+
+    def param_logical_axes(self):
+        return tfm.param_logical_axes(self.cfg)
+
+    # -- step functions ------------------------------------------------------
+    def _contrastive_loss(self):
+        loss = InfoNCELoss()
+        cfg = self.cfg
+
+        def fn(params, batch, ctx):
+            q = tfm.encode(cfg, params, batch["query"]["tokens"],
+                           batch["query"]["mask"], ctx)
+            hidden, aux = tfm.forward_hidden(
+                cfg, params, batch["passage"]["tokens"],
+                batch["passage"]["mask"], ctx)
+            p = tfm.pool(cfg, hidden, batch["passage"]["mask"])
+            scores = jnp.einsum("qd,pd->qp", q, p) / 0.02
+            labels = jnp.arange(q.shape[0], dtype=jnp.int32)
+            return loss(scores, labels) + 0.01 * aux
+
+        return fn
+
+    def build_cell(self, shape_name: str, mesh=None) -> Cell:
+        spec = self.shapes[shape_name]
+        cfg = self.cfg
+        rules = self.axis_rules()
+        b, s = spec["global_batch"], spec["seq_len"]
+        tok_specs = lambda bb, ss: {
+            "tokens": _sds((bb, ss), jnp.int32),
+            "mask": _sds((bb, ss), jnp.int32)}
+        tok_axes = {"tokens": ("batch", None), "mask": ("batch", None)}
+
+        if spec["kind"] == "train":
+            batch = {"query": tok_specs(b, s), "passage": tok_specs(b, s)}
+            axes = {"query": tok_axes, "passage": tok_axes}
+            return make_train_cell(
+                self.name, shape_name, loss_fn=self._contrastive_loss(),
+                abstract_params=self.abstract_params(),
+                param_axes=self.param_logical_axes(), batch_specs=batch,
+                batch_axes=axes, rules=rules, mesh=mesh,
+                optimizer=self.optimizer,
+                notes="contrastive bi-encoder step (fwd+bwd+opt)")
+
+        if spec["kind"] == "encode":
+            def encode_fn(params, batch):
+                ctx = (mesh, rules) if mesh is not None else None
+                return tfm.encode(cfg, params, batch["tokens"],
+                                  batch["mask"], ctx)
+            return make_infer_cell(
+                self.name, shape_name, "encode", encode_fn,
+                self.abstract_params(), self.param_logical_axes(),
+                tok_specs(b, s), tok_axes, rules, mesh,
+                notes="corpus-encoding prefill")
+
+        # serve: single-token decode against a full KV cache
+        cache_specs = jax.eval_shape(
+            lambda: tfm.init_cache(cfg, b, s))
+        tp = mesh.shape.get("model", 1) if mesh is not None else 1
+        cache_axes = tfm.cache_logical_axes(
+            cfg, b, tp_divides_kv=(cfg.n_kv_heads % tp == 0))
+
+        def serve_fn(params, cache, tokens):
+            ctx = (mesh, rules) if mesh is not None else None
+            return tfm.decode_step(cfg, params, cache, tokens, ctx)
+
+        sc = ShardCtx(mesh, rules)
+        abs_params = sc.shard(self.abstract_params(),
+                              self.param_logical_axes())
+        abs_cache = sc.shard(cache_specs, cache_axes)
+        abs_tokens = sc.shard(_sds((b,), jnp.int32), ("batch",))
+        return Cell(self.name, shape_name, "serve", serve_fn,
+                    (abs_params, abs_cache, abs_tokens),
+                    {"donate_argnums": (1,)},
+                    notes=f"1-token decode, KV cache len {s}")
+
+    # -- smoke -----------------------------------------------------------------
+    def reduced(self) -> "LMArch":
+        c = self.cfg
+        small = dataclasses.replace(
+            c, n_layers=2 if not c.moe or c.moe_every == 1 else 2,
+            d_model=64, n_heads=4,
+            n_kv_heads=2 if c.n_kv_heads < c.n_heads else 4,
+            head_dim=16, d_ff=128, vocab_size=512,
+            n_experts=min(c.n_experts, 8) if c.moe else 0,
+            top_k=min(c.top_k, 2) if c.moe else 0,
+            moe_d_ff=32 if c.moe else 0,
+            dtype=jnp.float32, attn_chunk=0, remat=False)
+        shapes = {
+            "train_4k": dict(kind="train", seq_len=32, global_batch=4),
+            "prefill_32k": dict(kind="encode", seq_len=64, global_batch=2),
+            "decode_32k": dict(kind="serve", seq_len=64, global_batch=4),
+            "long_500k": dict(kind="serve", seq_len=128, global_batch=1),
+        }
+        return LMArch(small, optimizer="adamw", shapes=shapes)
+
+    def smoke_inputs(self, shape_name: str, rng: np.random.Generator):
+        spec = self.shapes[shape_name]
+        b, s = spec["global_batch"], spec["seq_len"]
+        V = self.cfg.vocab_size
+        toks = lambda bb, ss: {
+            "tokens": jnp.asarray(rng.integers(3, V, (bb, ss)), jnp.int32),
+            "mask": jnp.ones((bb, ss), jnp.int32)}
+        if spec["kind"] == "train":
+            return {"query": toks(b, s), "passage": toks(b, s)}
+        if spec["kind"] == "encode":
+            return toks(b, s)
+        cache = tfm.init_cache(self.cfg, b, s)
+        cache["len"] = jnp.asarray(s - 1, jnp.int32)
+        return (cache, jnp.asarray(rng.integers(3, V, (b,)), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# GNN family (GraphSAGE)
+# ---------------------------------------------------------------------------
+
+GNN_SHAPES = {
+    "full_graph_sm": dict(kind="train", mode="full", n_nodes=2708,
+                          n_edges=10556, d_feat=1433, n_pairs=1024),
+    "minibatch_lg": dict(kind="train", mode="minibatch", batch_nodes=1024,
+                         fanouts=(15, 10), d_feat=602),
+    "ogb_products": dict(kind="train", mode="full", n_nodes=2449029,
+                         n_edges=61859140, d_feat=100, n_pairs=8192),
+    "molecule": dict(kind="train", mode="batched", n_graphs=128,
+                     n_nodes=30, n_edges=64, d_feat=64),
+}
+
+
+class GNNArch:
+    family = "gnn"
+
+    def __init__(self, cfg: gnn_lib.SAGEConfig, shapes=None, pad: int = 512):
+        self.cfg = cfg
+        self.name = cfg.name
+        self.shapes = shapes or GNN_SHAPES
+        self.pad = pad
+
+    def shape_names(self):
+        return list(self.shapes)
+
+    def axis_rules(self):
+        return AxisRules()
+
+    def abstract_params(self):
+        return gnn_lib.abstract_params(self.cfg)
+
+    def param_logical_axes(self):
+        return gnn_lib.param_logical_axes(self.cfg)
+
+    def _loss(self, mode, cfg):
+        loss = InfoNCELoss()
+
+        def full(params, batch, ctx):
+            z = gnn_lib.forward_full(cfg, params, batch["x"],
+                                     batch["edge_src"], batch["edge_dst"])
+            zq = jnp.take(z, batch["pairs"][:, 0], axis=0)
+            zp = jnp.take(z, batch["pairs"][:, 1], axis=0)
+            scores = jnp.einsum("qd,pd->qp", zq, zp) / 0.07
+            return loss(scores, jnp.arange(zq.shape[0], dtype=jnp.int32))
+
+        def minibatch(params, batch, ctx):
+            za = gnn_lib.forward_minibatch(
+                cfg, params, batch["a0"], batch["a1"], batch["a2"])
+            zp = gnn_lib.forward_minibatch(
+                cfg, params, batch["p0"], batch["p1"], batch["p2"])
+            scores = jnp.einsum("qd,pd->qp", za, zp) / 0.07
+            return loss(scores, jnp.arange(za.shape[0], dtype=jnp.int32))
+
+        def batched(params, batch, ctx):
+            za = gnn_lib.forward_batched_graphs(
+                cfg, params, batch["ax"], batch["aedges"],
+                batch["aemask"], batch["anmask"])
+            zp = gnn_lib.forward_batched_graphs(
+                cfg, params, batch["px"], batch["pedges"],
+                batch["pemask"], batch["pnmask"])
+            scores = jnp.einsum("qd,pd->qp", za, zp) / 0.07
+            return loss(scores, jnp.arange(za.shape[0], dtype=jnp.int32))
+
+        return {"full": full, "minibatch": minibatch,
+                "batched": batched}[mode]
+
+    def _batch_specs(self, spec):
+        f32 = jnp.float32
+        if spec["mode"] == "full":
+            n = round_up(spec["n_nodes"], self.pad)
+            e = round_up(spec["n_edges"], self.pad)
+            p = spec["n_pairs"]
+            batch = {"x": _sds((n, spec["d_feat"]), f32),
+                     "edge_src": _sds((e,), jnp.int32),
+                     "edge_dst": _sds((e,), jnp.int32),
+                     "pairs": _sds((p, 2), jnp.int32)}
+            axes = {"x": ("nodes", None), "edge_src": ("edges",),
+                    "edge_dst": ("edges",), "pairs": ("batch", None)}
+            note = (f"padded to nodes={n} edges={e} "
+                    "(isolated-node padding by the loader)")
+        elif spec["mode"] == "minibatch":
+            b = spec["batch_nodes"]
+            f1, f2 = spec["fanouts"]
+            d = spec["d_feat"]
+            tree = lambda: {
+                "0": _sds((b, d), f32), "1": _sds((b, f1, d), f32),
+                "2": _sds((b, f1, f2, d), f32)}
+            batch = {f"{side}{k}": v for side in "ap"
+                     for k, v in tree().items()}
+            axes = {f"{side}{k}": ("batch",) + (None,) * (1 + int(k) )
+                    for side in "ap" for k in "012"}
+            note = f"fixed-fanout {f1}x{f2} sampled blocks (real sampler)"
+        else:
+            g, n, e, d = (spec["n_graphs"], spec["n_nodes"],
+                          spec["n_edges"], spec["d_feat"])
+            one = lambda p: {
+                f"{p}x": _sds((g, n, d), f32),
+                f"{p}edges": _sds((g, e, 2), jnp.int32),
+                f"{p}emask": _sds((g, e), jnp.int32),
+                f"{p}nmask": _sds((g, n), jnp.int32)}
+            batch = {**one("a"), **one("p")}
+            axes = {k: ("batch",) + (None,) * (len(v.shape) - 1)
+                    for k, v in batch.items()}
+            note = "batched small graphs, anchor+positive views"
+        return batch, axes, note
+
+    def shape_cfg(self, shape_name) -> gnn_lib.SAGEConfig:
+        """Per-shape config: the input feature width is dataset-specific."""
+        return dataclasses.replace(
+            self.cfg, d_feat=self.shapes[shape_name]["d_feat"])
+
+    def build_cell(self, shape_name, mesh=None) -> Cell:
+        spec = self.shapes[shape_name]
+        cfg_s = self.shape_cfg(shape_name)
+        batch, axes, note = self._batch_specs(spec)
+        return make_train_cell(
+            self.name, shape_name, loss_fn=self._loss(spec["mode"], cfg_s),
+            abstract_params=gnn_lib.abstract_params(cfg_s),
+            param_axes=gnn_lib.param_logical_axes(cfg_s), batch_specs=batch,
+            batch_axes=axes, rules=self.axis_rules(), mesh=mesh,
+            optimizer="adamw", notes=note)
+
+    def reduced(self) -> "GNNArch":
+        small = dataclasses.replace(self.cfg, d_hidden=16)
+        shapes = {
+            "full_graph_sm": dict(kind="train", mode="full", n_nodes=64,
+                                  n_edges=256, d_feat=12, n_pairs=16),
+            "minibatch_lg": dict(kind="train", mode="minibatch",
+                                 batch_nodes=8, fanouts=(3, 2), d_feat=12),
+            "ogb_products": dict(kind="train", mode="full", n_nodes=128,
+                                 n_edges=512, d_feat=12, n_pairs=32),
+            "molecule": dict(kind="train", mode="batched", n_graphs=4,
+                             n_nodes=6, n_edges=10, d_feat=12),
+        }
+        small = dataclasses.replace(small, d_feat=12)
+        return GNNArch(small, shapes=shapes, pad=8)
+
+    def smoke_inputs(self, shape_name, rng: np.random.Generator):
+        spec = self.shapes[shape_name]
+        batch, _, _ = self._batch_specs(spec)
+
+        def rand(s):
+            if s.dtype == jnp.int32:
+                hi = 4
+                if "edge" in getattr(s, "_name", "") or True:
+                    hi = 4
+                return jnp.asarray(rng.integers(0, hi, s.shape), jnp.int32)
+            return jnp.asarray(rng.normal(size=s.shape), jnp.float32)
+
+        out = {}
+        for k, s in batch.items():
+            if s.dtype == jnp.int32:
+                if k in ("edge_src", "edge_dst"):
+                    n = round_up(spec["n_nodes"], self.pad)
+                    out[k] = jnp.asarray(
+                        rng.integers(0, spec["n_nodes"], s.shape), jnp.int32)
+                elif k == "pairs":
+                    out[k] = jnp.asarray(
+                        rng.integers(0, spec["n_nodes"], s.shape), jnp.int32)
+                elif k.endswith("edges"):
+                    out[k] = jnp.asarray(
+                        rng.integers(0, spec["n_nodes"], s.shape), jnp.int32)
+                elif k.endswith("mask"):
+                    out[k] = jnp.ones(s.shape, jnp.int32)
+                else:
+                    out[k] = jnp.asarray(
+                        rng.integers(0, 4, s.shape), jnp.int32)
+            else:
+                out[k] = jnp.asarray(
+                    rng.normal(size=s.shape).astype(np.float32))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+RECSYS_SHAPES = {
+    "train_batch": dict(kind="train", batch=65536),
+    "serve_p99": dict(kind="serve", batch=512),
+    "serve_bulk": dict(kind="serve", batch=262144),
+    "retrieval_cand": dict(kind="retrieval", batch=1,
+                           n_candidates=1_000_000, topk=100),
+}
+
+
+class RecSysArch:
+    family = "recsys"
+
+    def __init__(self, cfg: recsys_lib.RecSysConfig, shapes=None,
+                 rule_overrides: dict | None = None):
+        self.cfg = cfg
+        self.name = cfg.name
+        self.shapes = shapes or RECSYS_SHAPES
+        self.rule_overrides = rule_overrides or {}
+
+    def shape_names(self):
+        return list(self.shapes)
+
+    def axis_rules(self):
+        return AxisRules().with_overrides(**self.rule_overrides)
+
+    def abstract_params(self):
+        return recsys_lib.abstract_params(self.cfg)
+
+    def param_logical_axes(self):
+        return recsys_lib.param_logical_axes(self.cfg)
+
+    def _batch_specs(self, spec):
+        cfg = self.cfg
+        b = spec["batch"]
+        if spec["kind"] == "retrieval":
+            n = spec["n_candidates"]
+            if cfg.kind == "bst":
+                batch = {"hist": _sds((1, cfg.seq_len), jnp.int32),
+                         "profile": _sds((1, cfg.n_profile_fields),
+                                         jnp.int32),
+                         "cand_idx": _sds((n,), jnp.int32)}
+                axes = {"hist": (None, None), "profile": (None, None),
+                        "cand_idx": ("candidates",)}
+            else:
+                batch = {"user_idx": _sds((1, cfg.n_fields - 1), jnp.int32),
+                         "cand_idx": _sds((n,), jnp.int32)}
+                axes = {"user_idx": (None, None),
+                        "cand_idx": ("candidates",)}
+            return batch, axes
+        if cfg.kind == "bst":
+            batch = {"hist": _sds((b, cfg.seq_len), jnp.int32),
+                     "target": _sds((b,), jnp.int32),
+                     "profile": _sds((b, cfg.n_profile_fields), jnp.int32)}
+            axes = {"hist": ("batch", None), "target": ("batch",),
+                    "profile": ("batch", None)}
+        else:
+            batch = {"sparse_idx": _sds((b, cfg.n_fields), jnp.int32)}
+            axes = {"sparse_idx": ("batch", None)}
+        if spec["kind"] == "train":
+            batch["labels"] = _sds((b,), jnp.float32)
+            axes["labels"] = ("batch",)
+        return batch, axes
+
+    def build_cell(self, shape_name, mesh=None) -> Cell:
+        spec = self.shapes[shape_name]
+        cfg = self.cfg
+        batch, axes = self._batch_specs(spec)
+        rules = self.axis_rules()
+
+        if spec["kind"] == "train":
+            bce = BCELoss()
+
+            def loss_fn(params, b, ctx):
+                logits = recsys_lib.forward(cfg, params, b, mesh)
+                return bce(logits, b["labels"])
+
+            return make_train_cell(
+                self.name, shape_name, loss_fn=loss_fn,
+                abstract_params=self.abstract_params(),
+                param_axes=self.param_logical_axes(), batch_specs=batch,
+                batch_axes=axes, rules=rules, mesh=mesh,
+                optimizer="adamw", notes="CTR BCE step (fwd+bwd+adamw)")
+
+        if spec["kind"] == "serve":
+            def serve_fn(params, b):
+                return jax.nn.sigmoid(recsys_lib.forward(cfg, params, b,
+                                                         mesh))
+            return make_infer_cell(
+                self.name, shape_name, "serve", serve_fn,
+                self.abstract_params(), self.param_logical_axes(), batch,
+                axes, rules, mesh, notes="online/bulk scoring")
+
+        topk = spec["topk"]
+
+        def retrieval_fn(params, b):
+            scores = recsys_lib.retrieval_scores(cfg, params, b, mesh)
+            vals, idx = jax.lax.top_k(scores, topk)
+            return vals, jnp.take(b["cand_idx"], idx)
+
+        return make_infer_cell(
+            self.name, shape_name, "retrieval", retrieval_fn,
+            self.abstract_params(), self.param_logical_axes(), batch, axes,
+            rules, mesh,
+            notes=f"1 user x {spec['n_candidates']} candidates, top-{topk}"
+                  " (FastResultHeapq scenario)")
+
+    def reduced(self) -> "RecSysArch":
+        cfg = self.cfg
+        n_small = max(4, min(cfg.n_fields, 6))
+        small = dataclasses.replace(
+            cfg, vocab_sizes=(64,) * n_small, embed_dim=8,
+            mlp_dims=(32, 16), seq_len=min(cfg.seq_len, 6),
+            n_profile_fields=min(cfg.n_profile_fields, 3),
+            n_attn_layers=min(cfg.n_attn_layers, 2), d_attn=8)
+        shapes = {
+            "train_batch": dict(kind="train", batch=32),
+            "serve_p99": dict(kind="serve", batch=8),
+            "serve_bulk": dict(kind="serve", batch=64),
+            "retrieval_cand": dict(kind="retrieval", batch=1,
+                                   n_candidates=256, topk=8),
+        }
+        return RecSysArch(small, shapes=shapes)
+
+    def smoke_inputs(self, shape_name, rng: np.random.Generator):
+        spec = self.shapes[shape_name]
+        batch, _ = self._batch_specs(spec)
+        cfg = self.cfg
+        offs = recsys_lib.field_offsets(cfg.vocab_sizes)
+        sizes = np.asarray(cfg.vocab_sizes)
+
+        def field_ids(n_rows, fields):
+            cols = []
+            for f in fields:
+                cols.append(offs[f] + rng.integers(0, sizes[f], n_rows))
+            return jnp.asarray(np.stack(cols, 1), jnp.int32)
+
+        out = {}
+        for k, s in batch.items():
+            if k == "labels":
+                out[k] = jnp.asarray(rng.integers(0, 2, s.shape), jnp.float32)
+            elif k == "sparse_idx":
+                out[k] = field_ids(s.shape[0], range(cfg.n_fields))
+            elif k == "user_idx":
+                out[k] = field_ids(1, range(1, cfg.n_fields))
+            elif k in ("cand_idx", "target"):
+                out[k] = jnp.asarray(
+                    offs[0] + rng.integers(0, sizes[0], s.shape), jnp.int32)
+            elif k == "hist":
+                out[k] = jnp.asarray(
+                    offs[0] + rng.integers(0, sizes[0], s.shape), jnp.int32)
+            elif k == "profile":
+                nf = s.shape[1]
+                out[k] = field_ids(s.shape[0],
+                                   range(1, 1 + nf))
+            else:
+                raise KeyError(k)
+        return out

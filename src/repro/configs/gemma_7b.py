@@ -1,0 +1,15 @@
+"""gemma-7b: 28L d=3072 16H (GQA kv=16) d_ff=24576 vocab=256000, GeGLU,
+head_dim=256 [arXiv:2403.08295; hf]."""
+import jax.numpy as jnp
+
+from repro.configs.base import LMArch
+from repro.models.transformer import LMConfig
+
+
+def get_arch() -> LMArch:
+    return LMArch(LMConfig(
+        name="gemma-7b", n_layers=28, d_model=3072, n_heads=16,
+        n_kv_heads=16, head_dim=256, d_ff=24576, vocab_size=256000,
+        activation="geglu", norm="rmsnorm", rope_theta=10000.0,
+        pooling="last", dtype=jnp.bfloat16, attn_chunk=4096, remat=True,
+        scan_layers=False, seq_shard_acts=True))

@@ -1,0 +1,21 @@
+"""granite-moe-3b-a800m: 32L d=1536 24H (GQA kv=8) expert d_ff=512
+vocab=49155, MoE 40 experts top-8 [hf:ibm-granite; hf].
+
+40 experts are not divisible by the 16-way model axis: the divisibility
+guard shards each expert's FFN dim instead ("expert_ffn" -> model); see
+DESIGN.md §Arch-applicability.
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import LMArch
+from repro.models.transformer import LMConfig
+
+
+def get_arch() -> LMArch:
+    return LMArch(LMConfig(
+        name="granite-moe-3b-a800m", n_layers=32, d_model=1536, n_heads=24,
+        n_kv_heads=8, head_dim=64, d_ff=512, vocab_size=49155,
+        activation="swiglu", norm="rmsnorm", moe=True, n_experts=40,
+        top_k=8, moe_every=1, moe_d_ff=512, capacity_factor=1.25,
+        pooling="last", dtype=jnp.bfloat16, attn_chunk=4096, remat=True,
+        scan_layers=False, seq_shard_acts=True, seq_shard_attn=True))

@@ -1,0 +1,23 @@
+"""llama4-maverick-400b-a17b: 48L d=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 128 experts top-1 + shared expert, interleaved
+dense/MoE layers [hf:meta-llama/Llama-4; unverified].
+
+~400B total / ~17B active parameters; requires FSDP ("fsdp" rule over
+pod x data) + expert sharding over "model" + attn_chunk=1024 (§Perf:
+the 4096-chunk baseline peaks at 21.7 GB/device; 1024 fits at 15.6 GB).
+"""
+import jax.numpy as jnp
+
+from repro.configs.base import LMArch
+from repro.models.transformer import LMConfig
+
+
+def get_arch() -> LMArch:
+    return LMArch(LMConfig(
+        name="llama4-maverick-400b-a17b", n_layers=48, d_model=5120,
+        n_heads=40, n_kv_heads=8, head_dim=128, d_ff=8192,
+        vocab_size=202048, activation="swiglu", norm="rmsnorm", moe=True,
+        n_experts=128, top_k=1, moe_every=2, n_shared_experts=1,
+        moe_d_ff=8192, capacity_factor=1.25, pooling="last",
+        dtype=jnp.bfloat16, attn_chunk=1024, remat=True,
+        scan_layers=False, seq_shard_acts=True, seq_shard_attn=True))

@@ -1,0 +1,16 @@
+"""qwen2-0.5b: 24L d=896 14H (GQA kv=2) d_ff=4864 vocab=151936, QKV bias
+[arXiv:2407.10671; hf]."""
+import jax.numpy as jnp
+
+from repro.configs.base import LMArch
+from repro.models.transformer import LMConfig
+
+
+def get_arch() -> LMArch:
+    return LMArch(LMConfig(
+        name="qwen2-0.5b", n_layers=24, d_model=896, n_heads=14,
+        n_kv_heads=2, head_dim=64, d_ff=4864, vocab_size=151936,
+        activation="swiglu", norm="rmsnorm", qkv_bias=True,
+        rope_theta=1000000.0, pooling="last", dtype=jnp.bfloat16,
+        attn_chunk=4096, remat=True,
+        scan_layers=False, seq_shard_acts=True, seq_shard_attn=True))

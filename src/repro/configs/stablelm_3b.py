@@ -1,0 +1,15 @@
+"""stablelm-3b: 32L d=2560 32H (GQA kv=32) d_ff=6912 vocab=50304
+[hf:stabilityai/stablelm-2-1_6b; unverified] — LayerNorm variant."""
+import jax.numpy as jnp
+
+from repro.configs.base import LMArch
+from repro.models.transformer import LMConfig
+
+
+def get_arch() -> LMArch:
+    return LMArch(LMConfig(
+        name="stablelm-3b", n_layers=32, d_model=2560, n_heads=32,
+        n_kv_heads=32, head_dim=80, d_ff=6912, vocab_size=50304,
+        activation="swiglu", norm="layernorm", rope_theta=10000.0,
+        pooling="last", dtype=jnp.bfloat16, attn_chunk=4096, remat=True,
+        scan_layers=False, seq_shard_acts=True))

@@ -1,0 +1,14 @@
+"""trove-base: the paper's default retrieval encoder (BERT-base-like
+bidirectional-free decoder, mean pooling) used by examples."""
+import jax.numpy as jnp
+
+from repro.configs.base import LMArch
+from repro.models.transformer import LMConfig
+
+
+def get_arch() -> LMArch:
+    return LMArch(LMConfig(
+        name="trove-base", n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=12, head_dim=64, d_ff=3072, vocab_size=50304,
+        activation="gelu", norm="layernorm", pooling="mean",
+        dtype=jnp.bfloat16, remat=True), optimizer="adamw")

@@ -1,0 +1,12 @@
+"""wide-deep: 40 sparse fields, embed_dim=32, MLP 1024-512-256, wide
+linear + deep concat interaction [arXiv:1606.07792]."""
+from repro.configs.base import RecSysArch
+from repro.models.recsys import RecSysConfig
+
+_VOCABS = ((2**24, 2**23, 2**22, 2**22) + (2**16,) * 11 + (2**12,) * 25)
+
+
+def get_arch() -> RecSysArch:
+    return RecSysArch(RecSysConfig(
+        name="wide-deep", kind="wide_deep", vocab_sizes=_VOCABS,
+        embed_dim=32, mlp_dims=(1024, 512, 256)))

@@ -1,0 +1,38 @@
+"""RetrievalCollator: tokenize + batch (paper §3.2.2)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.config import DataArguments
+from repro.data.tokenizer import HashTokenizer
+
+
+class RetrievalCollator:
+    def __init__(self, args: DataArguments, tokenizer: HashTokenizer,
+                 append_eos: bool | None = None):
+        self.args = args
+        self.tokenizer = tokenizer
+        self.append_eos = (args.append_eos if append_eos is None
+                           else append_eos)
+
+    def _encode(self, texts, max_len):
+        return self.tokenizer.batch_encode(
+            texts, max_len, self.append_eos, self.args.pad_to_multiple)
+
+    def __call__(self, features: list[dict]) -> dict:
+        queries = [f["query"] for f in features]
+        passages = [p for f in features for p in f["passages"]]
+        q_tok, q_mask = self._encode(queries, self.args.query_max_len)
+        p_tok, p_mask = self._encode(passages, self.args.passage_max_len)
+        batch = {
+            "query": {"tokens": q_tok, "mask": q_mask},
+            "passage": {"tokens": p_tok, "mask": p_mask},
+        }
+        if "labels" in features[0]:
+            batch["labels"] = np.stack([f["labels"] for f in features])
+        return batch
+
+    def encode_texts(self, texts: list[str], max_len: int | None = None):
+        toks, mask = self._encode(texts, max_len or self.args.passage_max_len)
+        return {"tokens": toks, "mask": mask}

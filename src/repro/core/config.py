@@ -1,0 +1,130 @@
+"""Configuration objects mirroring the paper's workflow (§3.1).
+
+Users build experiments from small config dataclasses, instantiable from
+the command line (``parse_cli``): MaterializedQRelConfig + DataArguments
+-> dataset;  ModelArguments -> retriever;  RetrievalTrainingArguments /
+EvaluationArguments -> trainer / evaluator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Any, Callable, Sequence
+
+
+@dataclasses.dataclass
+class DataArguments:
+    query_max_len: int = 32
+    passage_max_len: int = 128
+    group_size: int = 2                  # 1 positive + (group_size-1) negatives
+    append_eos: bool = False
+    vocab_size: int = 50304              # hashing-tokenizer vocab
+    pad_to_multiple: int = 8
+
+
+@dataclasses.dataclass
+class ModelArguments:
+    arch: str = "trove-base"             # key into repro.configs registry
+    encoder_class: str = "lm"            # encoder registry alias
+    pooling: str = "last"
+    normalize: bool = True
+    temperature: float = 0.02
+    loss: str = "infonce"                # loss registry alias or callable
+    lora_rank: int = 0
+    dtype: str = "float32"
+
+
+@dataclasses.dataclass
+class RetrievalTrainingArguments:
+    output_dir: str = "/tmp/trove_run"
+    learning_rate: float = 1e-3
+    weight_decay: float = 0.01
+    warmup_steps: int = 10
+    max_steps: int = 100
+    per_device_batch_size: int = 8
+    grad_accum_steps: int = 1
+    optimizer: str = "adamw"             # adamw | adafactor
+    grad_clip: float = 1.0
+    checkpoint_every: int = 50
+    keep_checkpoints: int = 2
+    async_checkpoint: bool = True
+    grad_compression: str = "none"       # none | bf16 | int8
+    seed: int = 0
+    log_every: int = 10
+    aux_loss_weight: float = 0.01        # MoE load-balance loss
+
+
+@dataclasses.dataclass
+class EvaluationArguments:
+    topk: int = 100
+    encode_batch_size: int = 32
+    query_batch_size: int = 256
+    cache_dir: str | None = None         # embedding cache (mmap)
+    use_cached_embeddings: bool = True
+    fair_sharding: bool = True
+    metrics: tuple[str, ...] = ("ndcg@10", "mrr@10", "recall@100")
+    heap_impl: str = "jax"               # jax | pallas | python (baseline)
+
+
+def parse_cli(*arg_classes, argv: Sequence[str] | None = None):
+    """Minimal HfArgumentParser equivalent: ``--field value`` pairs."""
+    argv = list(sys.argv[1:] if argv is None else argv)
+    kv: dict[str, str] = {}
+    i = 0
+    while i < len(argv):
+        tok = argv[i]
+        if tok.startswith("--"):
+            if "=" in tok:
+                k, v = tok[2:].split("=", 1)
+                kv[k] = v
+                i += 1
+            else:
+                kv[tok[2:]] = argv[i + 1] if i + 1 < len(argv) else "true"
+                i += 2
+        else:
+            i += 1
+    out = []
+    for cls in arg_classes:
+        fields = {f.name: f for f in dataclasses.fields(cls)}
+        kwargs: dict[str, Any] = {}
+        for name, field in fields.items():
+            if name not in kv:
+                continue
+            raw = kv[name]
+            typ = field.type if isinstance(field.type, type) else type(
+                field.default)
+            if typ is bool:
+                kwargs[name] = raw.lower() in ("1", "true", "yes")
+            elif typ in (int, float):
+                kwargs[name] = typ(raw)
+            elif typ is tuple or isinstance(field.default, tuple):
+                kwargs[name] = tuple(x.strip() for x in raw.split(","))
+            else:
+                kwargs[name] = raw
+        out.append(cls(**kwargs))
+    return tuple(out) if len(out) > 1 else out[0]
+
+
+@dataclasses.dataclass
+class MaterializedQRelConfig:
+    """How one (query, corpus, qrel) source is loaded & processed on the fly.
+
+    Mirrors the paper's options: score-window filtering, relabeling,
+    per-query random subsetting of documents, query-id subsetting, and
+    arbitrary user callbacks.
+    """
+
+    qrel_path: str = ""
+    query_path: str = ""
+    corpus_path: str = ""
+    # filtering / transformation (applied lazily, in this order)
+    min_score: float | None = None
+    max_score: float | None = None
+    filter_fn: Callable[..., Any] | None = None     # (qid, did, score) -> bool
+    new_label: float | None = None                  # relabel kept triplets
+    transform_fn: Callable[..., Any] | None = None  # (score) -> score
+    group_random_k: int | None = None               # sample k docs per query
+    query_subset_from: str | None = None            # qrel file giving query ids
+    loader: str | None = None                       # registered loader name
+    seed: int = 0

@@ -1,0 +1,109 @@
+"""Memory-mapped, lazily-loaded embedding cache (paper §3.2.2).
+
+``cache_records(ids, vectors)`` appends; vectors are served from an
+``np.memmap`` so only requested rows are faulted in.  Writes are atomic
+(tmp files + os.replace of the index) and append-safe across sessions.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.data.table import stable_id_hash
+
+
+class EmbeddingCache:
+    def __init__(self, path: str, dim: int, dtype=np.float16):
+        self.path = path
+        self.dim = dim
+        self.dtype = np.dtype(dtype)
+        os.makedirs(path, exist_ok=True)
+        self._vec_path = os.path.join(path, "vectors.bin")
+        self._ids_path = os.path.join(path, "ids.npy")
+        self._meta_path = os.path.join(path, "meta.json")
+        self._ids = np.empty(0, np.int64)
+        self._sorted = None
+        self._mmap = None
+        self._load()
+
+    def _load(self):
+        if os.path.exists(self._meta_path):
+            with open(self._meta_path) as f:
+                meta = json.load(f)
+            assert meta["dim"] == self.dim, "cache dim mismatch"
+            self.dtype = np.dtype(meta["dtype"])
+            self._ids = np.load(self._ids_path, mmap_mode="r")
+            self._refresh_mmap()
+
+    def _refresh_mmap(self):
+        n = len(self._ids)
+        self._mmap = (np.memmap(self._vec_path, dtype=self.dtype, mode="r",
+                                shape=(n, self.dim)) if n else None)
+        self._sorted = None
+
+    def __len__(self):
+        return len(self._ids)
+
+    # -- write ------------------------------------------------------------------
+    def cache_records(self, ids, vectors: np.ndarray):
+        """Append (ids, vectors).  ids: raw ids or int hashes."""
+        vectors = np.ascontiguousarray(vectors, dtype=self.dtype)
+        assert vectors.shape[1] == self.dim
+        hashes = np.asarray([stable_id_hash(i) for i in ids], np.int64)
+        assert len(hashes) == len(vectors)
+        with open(self._vec_path, "ab") as f:
+            f.write(vectors.tobytes())
+        new_ids = np.concatenate([np.asarray(self._ids), hashes])
+        tmp = self._ids_path + ".tmp.npy"
+        np.save(tmp, new_ids)
+        os.replace(tmp, self._ids_path)
+        tmp_meta = self._meta_path + ".tmp"
+        with open(tmp_meta, "w") as f:
+            json.dump({"dim": self.dim, "dtype": self.dtype.name,
+                       "n": len(new_ids)}, f)
+        os.replace(tmp_meta, self._meta_path)
+        self._ids = new_ids
+        self._refresh_mmap()
+
+    # -- read -------------------------------------------------------------------
+    def _ensure_sorted(self):
+        if self._sorted is None:
+            ids = np.asarray(self._ids)
+            self._perm = np.argsort(ids, kind="stable")
+            self._sorted = ids[self._perm]
+
+    def _rows_for(self, hashes: np.ndarray) -> np.ndarray:
+        self._ensure_sorted()
+        pos = np.searchsorted(self._sorted, hashes)
+        pos = np.clip(pos, 0, len(self._sorted) - 1)
+        ok = self._sorted[pos] == hashes
+        rows = np.where(ok, self._perm[pos], -1)
+        return rows
+
+    def __contains__(self, raw_id) -> bool:
+        if not len(self._ids):
+            return False
+        h = np.asarray([stable_id_hash(raw_id)], np.int64)
+        return bool(self._rows_for(h)[0] >= 0)
+
+    def has(self, ids) -> np.ndarray:
+        if not len(self._ids):
+            return np.zeros(len(ids), bool)
+        h = np.asarray([stable_id_hash(i) for i in ids], np.int64)
+        return self._rows_for(h) >= 0
+
+    def get(self, ids) -> np.ndarray:
+        """Lazy fetch: only the requested rows are read from disk."""
+        if not len(self._ids):
+            raise KeyError(f"{len(ids)} ids not cached (cache empty)")
+        h = np.asarray([stable_id_hash(i) for i in ids], np.int64)
+        rows = self._rows_for(h)
+        if (rows < 0).any():
+            raise KeyError(f"{(rows < 0).sum()} ids not cached")
+        return np.asarray(self._mmap[rows])
+
+    def get_one(self, raw_id) -> np.ndarray:
+        return self.get([raw_id])[0]

@@ -1,0 +1,46 @@
+"""Fair sharding: throughput-weighted shard sizes (paper §3.5).
+
+Mixing devices with different throughput (or pods with stragglers) stalls
+the fast ones under equal sharding.  ``FairSharder`` keeps an EMA of
+per-worker throughput and splits each round's items proportionally, so all
+workers finish together.  Also used for straggler mitigation: a slow
+worker's share shrinks on the next round.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class FairSharder:
+    def __init__(self, n_workers: int, alpha: float = 0.5,
+                 min_share: float = 0.01):
+        self.n = n_workers
+        self.alpha = alpha
+        self.min_share = min_share
+        self.throughput = np.ones(n_workers, np.float64)
+
+    def shares(self, total_items: int) -> list[int]:
+        w = np.maximum(self.throughput, 1e-9)
+        frac = np.maximum(w / w.sum(), self.min_share)
+        frac = frac / frac.sum()
+        sizes = np.floor(frac * total_items).astype(int)
+        # distribute the remainder to the fastest workers
+        rem = total_items - sizes.sum()
+        order = np.argsort(-w)
+        for i in range(rem):
+            sizes[order[i % self.n]] += 1
+        return sizes.tolist()
+
+    def bounds(self, total_items: int) -> list[tuple[int, int]]:
+        sizes = self.shares(total_items)
+        ends = np.cumsum(sizes)
+        starts = ends - sizes
+        return list(zip(starts.tolist(), ends.tolist()))
+
+    def update(self, worker: int, items: int, seconds: float):
+        if seconds <= 0 or items <= 0:
+            return
+        obs = items / seconds
+        self.throughput[worker] = (
+            self.alpha * obs + (1 - self.alpha) * self.throughput[worker])

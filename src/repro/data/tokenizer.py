@@ -1,0 +1,70 @@
+"""Deterministic hashing tokenizer (offline stand-in for HF tokenizers).
+
+Splits on whitespace/punctuation; each token maps to a stable
+blake2-hashed id.  No vocabulary files, fully reproducible, adequate for
+the framework's data-path and training mechanics (the encoder never sees
+raw text anyway).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import re
+
+import numpy as np
+
+_TOKEN_RE = re.compile(r"[a-z0-9]+|[^\sa-z0-9]")
+
+
+class HashTokenizer:
+    pad_id = 0
+    bos_id = 1
+    eos_id = 2
+    n_special = 3
+
+    def __init__(self, vocab_size: int = 50304, lowercase: bool = True):
+        assert vocab_size > self.n_special
+        self.vocab_size = vocab_size
+        self.lowercase = lowercase
+        self._cache: dict[str, int] = {}
+
+    def _token_id(self, tok: str) -> int:
+        tid = self._cache.get(tok)
+        if tid is None:
+            h = hashlib.blake2b(tok.encode(), digest_size=8).digest()
+            tid = self.n_special + int.from_bytes(h, "little") % (
+                self.vocab_size - self.n_special)
+            if len(self._cache) < 1_000_000:
+                self._cache[tok] = tid
+        return tid
+
+    def encode(self, text: str, max_len: int | None = None,
+               append_eos: bool = False) -> list[int]:
+        if self.lowercase:
+            text = text.lower()
+        ids = [self._token_id(t) for t in _TOKEN_RE.findall(text)]
+        if append_eos:
+            ids.append(self.eos_id)
+        if max_len is not None:
+            ids = ids[:max_len]
+            if append_eos and (not ids or ids[-1] != self.eos_id):
+                ids[-1] = self.eos_id
+        return ids
+
+    def batch_encode(self, texts: list[str], max_len: int,
+                     append_eos: bool = False,
+                     pad_to_multiple: int = 1):
+        """Returns (tokens (B, L) int32, mask (B, L) int32)."""
+        enc = [self.encode(t, max_len, append_eos) for t in texts]
+        longest = max((len(e) for e in enc), default=1)
+        longest = max(longest, 1)
+        if pad_to_multiple > 1:
+            longest = -(-longest // pad_to_multiple) * pad_to_multiple
+        longest = min(longest, max_len) if max_len else longest
+        toks = np.full((len(enc), longest), self.pad_id, np.int32)
+        mask = np.zeros((len(enc), longest), np.int32)
+        for i, e in enumerate(enc):
+            e = e[:longest]
+            toks[i, : len(e)] = e
+            mask[i, : len(e)] = 1
+        return toks, mask

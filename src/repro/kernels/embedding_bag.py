@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: fused EmbeddingBag (gather + weighted segment-sum).
+
+RecSys hot path (DESIGN.md §6): JAX has no native EmbeddingBag; the jnp
+reference gathers (B, L, D) rows to HBM then reduces.  This kernel keeps
+the gathered rows in VMEM: for each batch tile it walks the L bag slots,
+dynamically slicing one table row at a time (HBM->VMEM row DMA) and
+accumulating on the VPU — HBM traffic drops from O(B*L*D) write +
+O(B*L*D) read to O(B*L*D) read only, and the (B,L,D) intermediate never
+exists.
+
+The table stays in ANY memory (HBM) via ``pl.BlockSpec(memory_space=ANY)``
+and rows are fetched with dynamic loads; padding ids (<0) contribute 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bag_kernel(idx_ref, w_ref, table_ref, out_ref, *, L: int):
+    bq, d = out_ref.shape
+    acc = jnp.zeros((bq, d), jnp.float32)
+
+    def slot(l, acc):
+        ids = idx_ref[:, l]                          # (bq,)
+        w = w_ref[:, l].astype(jnp.float32)
+
+        def row(b, acc):
+            rid = ids[b]
+            safe = jnp.maximum(rid, 0)
+            vec = pl.load(table_ref, (pl.ds(safe, 1), slice(None)))
+            vec = vec.astype(jnp.float32) * w[b] * (rid >= 0)
+            return jax.lax.dynamic_update_slice(
+                acc, jax.lax.dynamic_slice(acc, (b, 0), (1, d)) + vec,
+                (b, 0))
+
+        return jax.lax.fori_loop(0, bq, row, acc)
+
+    acc = jax.lax.fori_loop(0, L, slot, acc)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+def embedding_bag_pallas(table, idx, weights=None, *, bq: int = 256,
+                         interpret: bool = False):
+    """table (V, D); idx (B, L) int32 (-1 = pad); optional weights (B, L)."""
+    b, L = idx.shape
+    v, d = table.shape
+    if weights is None:
+        weights = jnp.ones((b, L), table.dtype)
+    bq = min(bq, b)
+    grid = (pl.cdiv(b, bq),)
+    kernel = functools.partial(_bag_kernel, L=L)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, L), lambda i: (i, 0)),
+            pl.BlockSpec((bq, L), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pl.ANY),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), weights, table)

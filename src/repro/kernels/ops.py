@@ -1,0 +1,96 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) kernels execute in ``interpret=True`` mode; on
+TPU they compile via Mosaic.  Wrappers handle padding to hardware-aligned
+tiles (lanes = multiples of 128 on TPU) and expose plain array APIs.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import topk as _topk
+from repro.kernels import embedding_bag as _bag
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_axis(x, axis: int, mult: int, fill):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bq", "bc", "interpret"))
+def _topk_update_jit(vals, ids, scores, chunk_ids, bq, bc, interpret):
+    return _topk.topk_update_pallas(
+        vals, ids, scores, chunk_ids, bq=bq, bc=bc, interpret=interpret)
+
+
+def topk_update(vals, ids, scores, chunk_ids, *, bq: int = 128,
+                bc: int = 512, interpret: bool | None = None):
+    """FastResultHeapq merge: (Q,k) state x (Q,C) chunk -> (Q,k) state."""
+    interpret = _default_interpret() if interpret is None else interpret
+    q, k = vals.shape
+    scores = _pad_axis(jnp.asarray(scores, jnp.float32), 1, 128,
+                       _topk.NEG_INF)
+    chunk_ids = _pad_axis(jnp.asarray(chunk_ids, jnp.int32), 0, 128, -1)
+    vals_p = _pad_axis(jnp.asarray(vals, jnp.float32), 0, 8, _topk.NEG_INF)
+    ids_p = _pad_axis(jnp.asarray(ids, jnp.int32), 0, 8, -1)
+    out_v, out_i = _topk_update_jit(
+        vals_p, ids_p, _pad_axis(scores, 0, 8, _topk.NEG_INF), chunk_ids,
+        bq, min(bc, scores.shape[1]), interpret)
+    return out_v[:q], out_i[:q]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "id_offset", "bq", "bn",
+                                    "interpret"))
+def _fused_jit(queries, docs, k, id_offset, bq, bn, interpret):
+    return _topk.fused_score_topk_pallas(
+        queries, docs, k, id_offset=id_offset, bq=bq, bn=bn,
+        interpret=interpret)
+
+
+def fused_score_topk(queries, docs, k: int, *, id_offset: int = 0,
+                     bq: int = 128, bn: int = 512,
+                     interpret: bool | None = None):
+    """Top-k of queries @ docs.T with no HBM score matrix (beyond-paper)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    q = queries.shape[0]
+    queries_p = _pad_axis(jnp.asarray(queries), 0, 8, 0.0)
+    docs = jnp.asarray(docs)
+    out_v, out_i = _fused_jit(queries_p, docs, k, id_offset, bq,
+                              min(bn, max(docs.shape[0], 8)), interpret)
+    return out_v[:q], out_i[:q]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "interpret"))
+def _bag_jit(table, idx, weights, bq, interpret):
+    return _bag.embedding_bag_pallas(
+        table, idx, weights, bq=bq, interpret=interpret)
+
+
+def embedding_bag(table, idx, weights=None, *, bq: int = 256,
+                  interpret: bool | None = None):
+    """Fused gather+reduce EmbeddingBag; idx < 0 = padding."""
+    interpret = _default_interpret() if interpret is None else interpret
+    b = idx.shape[0]
+    idx_p = _pad_axis(jnp.asarray(idx, jnp.int32), 0, 8, -1)
+    if weights is not None:
+        weights = _pad_axis(jnp.asarray(weights), 0, 8, 0.0)
+    else:
+        weights = jnp.ones(idx_p.shape, table.dtype)
+    out = _bag_jit(table, idx_p, weights, bq, interpret)
+    return out[:b]

@@ -1,0 +1,174 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import: jax locks the device count on first
+# initialization.  512 host devices let make_mesh build the production
+# meshes ((16,16) single-pod / (2,16,16) multi-pod) on this CPU container.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:  ``jax.jit(step).lower(*abstract_args).compile()`` must
+succeed against the production mesh — proving the sharding config is
+coherent (no mismatch, no compile-OOM, partitionable collectives) with
+ZERO real allocation (inputs are ShapeDtypeStructs).  Records
+``memory_analysis`` (fits-on-chip proof), ``cost_analysis`` (FLOPs/bytes)
+and the parsed collective schedule for EXPERIMENTS.md §Dry-run/§Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma-7b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import all_cells, get_arch
+from repro.launch.memmodel import memory_model
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (collective_breakdown, collective_bytes,
+                                   model_flops, roofline_terms)
+
+
+# archs whose unrolled-HLO compile is impractically slow on this 1-core
+# container (llama4: 48 unrolled MoE layers > 30 min in XLA:CPU).  They
+# lower with scan; since HloCostAnalysis counts while bodies once, their
+# roofline compute term is substituted from MODEL_FLOPS x remat factor
+# (flops_source="analytic" in the record).
+FORCE_SCAN = {"llama4-maverick-400b-a17b"}
+REMAT_RECOMPUTE_FACTOR = 4.0 / 3.0      # fwd + bwd + fwd-recompute / (fwd+bwd)
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             mesh=None, arch=None) -> dict:
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
+    arch = arch or get_arch(arch_name)
+    force_scan = arch_name in FORCE_SCAN
+    if (multi_pod or force_scan) and hasattr(arch, "variant"):
+        # multi-pod pass proves the "pod" axis shards (compile success);
+        # scan-over-layers keeps the HLO compact => fast 512-way compiles.
+        # The single-pod pass stays unrolled for exact cost analysis.
+        arch = arch.variant(scan_layers=True)
+    cell = arch.build_cell(shape_name, mesh=mesh)
+    t0 = time.monotonic()
+    with mesh:
+        lowered = jax.jit(cell.fn, **cell.jit_kwargs).lower(
+            *cell.abstract_args)
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+    hlo_text = compiled.as_text()
+    coll = collective_bytes(hlo_text)
+    breakdown = [
+        {"kind": k, "operand": o, "count": c, "bytes": b}
+        for k, o, c, b in collective_breakdown(hlo_text)]
+    n_dev = mesh.size
+    terms = roofline_terms(cost, coll["total"])
+    mf = model_flops(arch, shape_name)
+    flops_source = "hlo"
+    if force_scan and not multi_pod:
+        # scan under-reports HLO flops (while bodies counted once):
+        # substitute the analytic term, keep the raw HLO value alongside
+        mult = (REMAT_RECOMPUTE_FACTOR
+                if cell.kind == "train" else 1.0)
+        analytic = mf * mult / n_dev
+        terms["hlo_flops_per_device_raw_scan"] = \
+            terms["hlo_flops_per_device"]
+        terms["hlo_flops_per_device"] = analytic
+        terms["compute_s"] = analytic / 197e12
+        bound = max(terms["compute_s"], terms["memory_s"],
+                    terms["collective_s"])
+        terms["step_lower_bound_s"] = bound
+        terms["roofline_fraction"] = (terms["compute_s"] / bound
+                                      if bound else 0.0)
+        flops_source = "analytic(model_flops x remat)"
+    hlo_flops_global = terms["hlo_flops_per_device"] * n_dev
+    rec = {
+        "arch": arch_name, "shape": shape_name, "kind": cell.kind,
+        "mesh": dict(mesh.shape), "n_devices": n_dev,
+        "notes": cell.notes,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        # xla_*: CPU-backend buffer assignment (pessimistic vs TPU — no
+        # fusion/schedule parity; see memmodel.py).  memory_model: analytic
+        # per-device budget from exact sharded shapes — the fit proof.
+        "memory": {
+            "xla_argument_bytes": mem.argument_size_in_bytes,
+            "xla_output_bytes": mem.output_size_in_bytes,
+            "xla_temp_bytes": mem.temp_size_in_bytes,
+            "model": memory_model(arch, shape_name, mesh, cell),
+        },
+        "cost": {k: cost.get(k) for k in
+                 ("flops", "bytes accessed", "transcendentals")
+                 if k in cost},
+        "collectives": coll,
+        "collective_breakdown": breakdown,
+        "roofline": terms,
+        "flops_source": flops_source,
+        "model_flops_global": mf,
+        "useful_compute_ratio": (
+            mf / hlo_flops_global if hlo_flops_global else None),
+    }
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = (all_cells() if args.all
+             else [(args.arch, args.shape)])
+    meshes = ([False, True] if args.both_meshes
+              else [args.multi_pod])
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        tag = "multipod" if multi_pod else "singlepod"
+        for arch_name, shape_name in cells:
+            path = os.path.join(args.out,
+                                f"{tag}__{arch_name}__{shape_name}.json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip] {tag} {arch_name} {shape_name}")
+                continue
+            t0 = time.monotonic()
+            try:
+                rec = run_cell(arch_name, shape_name, multi_pod, mesh=mesh)
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                r = rec["roofline"]
+                mm = rec["memory"]["model"]
+                print(f"[ok]   {tag} {arch_name} {shape_name} "
+                      f"compile={rec['compile_s']:.1f}s "
+                      f"mem/dev={mm['total_bytes']/1e9:.2f}GB"
+                      f"{'' if mm['fits_16GB'] else '(!)'} "
+                      f"dom={r['dominant']} "
+                      f"c={r['compute_s']*1e3:.2f}ms "
+                      f"m={r['memory_s']*1e3:.2f}ms "
+                      f"n={r['collective_s']*1e3:.2f}ms",
+                      flush=True)
+            except Exception as e:                      # noqa: BLE001
+                failures.append((tag, arch_name, shape_name, str(e)))
+                with open(path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"[FAIL] {tag} {arch_name} {shape_name}: "
+                      f"{type(e).__name__}: {str(e)[:200]}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        raise SystemExit(1)
+    print("\nALL CELLS COMPILED")
+
+
+if __name__ == "__main__":
+    main()

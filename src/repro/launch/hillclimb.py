@@ -1,0 +1,128 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb runner: compile named variants of a cell and diff the
+roofline terms against the paper-faithful baseline.
+
+  python -m repro.launch.hillclimb --cell gemma-7b:train_4k \
+      --variants baseline,inline_mask --out results/hillclimb
+"""
+
+import argparse
+import json
+import time
+
+import jax
+
+from repro.configs import get_arch
+from repro.launch.dryrun import run_cell
+from repro.launch.mesh import make_production_mesh
+
+# named config transforms per family (LM variants use LMArch.variant)
+LM_VARIANTS = {
+    "baseline": {},
+    "inline_mask": dict(inline_mask=True),
+    "dus_cache": dict(dus_cache_update=True),
+    "inline_mask+dus": dict(inline_mask=True, dus_cache_update=True),
+    "no_sp_acts": dict(seq_shard_acts=False),
+    "cap1.0": dict(capacity_factor=1.0),
+    "chunk2048": dict(attn_chunk=2048),
+    "chunk1024": dict(attn_chunk=1024),
+    "chunk8192": dict(attn_chunk=8192),
+    "no_remat": dict(remat=False),
+    "moe_shardmap": dict(moe_impl="shardmap"),
+    "moe_shardmap+inline_mask": dict(moe_impl="shardmap",
+                                     inline_mask=True),
+    "inline_mask+chunk2048": dict(inline_mask=True, attn_chunk=2048),
+}
+
+RECSYS_VARIANTS = {
+    "baseline": ({}, {}),
+    "psum_lookup": (dict(embedding_impl="psum"), {}),
+    # spread retrieval candidates over the (otherwise idle) model axis:
+    # the gathered-rows psum shrinks TP-fold and compute spreads TP-fold
+    "cand_full_shard": ({}, {"candidates": ("pod", "data", "model")}),
+    "psum+cand_shard": (dict(embedding_impl="psum"),
+                        {"candidates": ("pod", "data", "model")}),
+    # bf16-wire psum lookup + MLP resharded over the model axis
+    "psum_bf16+mlp_shard": (dict(embedding_impl="psum",
+                                 batch_full_shard=True), {}),
+    "mlp_shard": (dict(batch_full_shard=True), {}),
+    # serving-mode answer: replicate the table (fits HBM), rows never
+    # cross the wire; candidates can then shard over EVERY axis
+    "replicated_table": ({}, {"embed_rows": ()}),
+    "repl_table+full_shard": (dict(batch_full_shard=True),
+                              {"embed_rows": (),
+                               "candidates": ("pod", "data", "model")}),
+}
+
+
+def variant_arch(arch, name: str):
+    if name == "baseline":
+        return arch
+    if arch.family == "lm":
+        return arch.variant(**LM_VARIANTS[name])
+    if arch.family == "recsys":
+        import dataclasses
+
+        from repro.configs.base import RecSysArch
+        cfg_kw, rules = RECSYS_VARIANTS[name]
+        cfg = dataclasses.replace(arch.cfg, **cfg_kw)
+        return RecSysArch(cfg, shapes=arch.shapes, rule_overrides=rules)
+    raise KeyError(name)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, help="arch:shape")
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/hillclimb")
+    args = ap.parse_args()
+
+    arch_name, shape = args.cell.split(":")
+    os.makedirs(args.out, exist_ok=True)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    rows = []
+    for vname in args.variants.split(","):
+        arch = variant_arch(get_arch(arch_name), vname)
+        t0 = time.monotonic()
+        try:
+            rec = run_cell(arch_name, shape, args.multi_pod, mesh=mesh,
+                           arch=arch)
+        except Exception as e:                       # noqa: BLE001
+            print(f"[FAIL] {vname}: {type(e).__name__}: {str(e)[:300]}",
+                  flush=True)
+            continue
+        rec["variant"] = vname
+        # re-lower for the breakdown (run_cell doesn't retain the HLO)
+        path = os.path.join(
+            args.out, f"{arch_name}__{shape}__{vname}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        r = rec["roofline"]
+        c = rec["collectives"]
+        rows.append((vname, r, c, rec))
+        print(f"[ok] {vname:18s} compile={rec['compile_s']:6.1f}s "
+              f"flops/dev={r['hlo_flops_per_device']:.3e} "
+              f"c={r['compute_s']*1e3:9.2f}ms "
+              f"m={r['memory_s']*1e3:9.2f}ms "
+              f"n={r['collective_s']*1e3:9.2f}ms "
+              f"coll(AG/AR/A2A)GB="
+              f"{c['all-gather']/1e9:.1f}/{c['all-reduce']/1e9:.1f}/"
+              f"{c['all-to-all']/1e9:.1f} "
+              f"mem/dev={rec['memory']['model']['total_bytes']/1e9:.2f}GB",
+              flush=True)
+    if len(rows) > 1:
+        base = rows[0][1]
+        print("\ndeltas vs", rows[0][0])
+        for vname, r, c, _ in rows[1:]:
+            for term in ("compute_s", "memory_s", "collective_s"):
+                if base[term] > 0:
+                    d = (r[term] - base[term]) / base[term] * 100
+                    print(f"  {vname:18s} {term:13s} {d:+7.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Analytic per-device memory model for dry-run cells.
+
+``memory_analysis()`` on the CPU-target partitioned module is structurally
+pessimistic: XLA:CPU neither fuses the fp32 norm/softmax intermediates nor
+schedules for memory the way XLA:TPU does, so its temp numbers overstate
+TPU HBM by an order of magnitude (measured: qwen2 train_4k reports 128 GB
+temp while every individual buffer is <1 GB and the analytic bound is
+~6 GB).  This module derives the defensible per-device budget from exact
+sharded shapes:
+
+  state+args  — exact: ``NamedSharding.shard_shape`` over the cell's
+                abstract args (params, optimizer state, batch, KV cache)
+  activations — family-specific closed forms under the declared remat /
+                sequence-sharding policy (documented per formula)
+  transient   — gradient buffer (fp32 copy of params) for train cells;
+                one layer's live intermediates (score chunk, FFN/MoE
+                buffers) with a 3x scheduling-slack factor
+
+Reported next to the XLA numbers in EXPERIMENTS.md §Dry-run.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+
+def _leaf_bytes_sharded(leaf) -> int:
+    shape = leaf.shape
+    sh = getattr(leaf, "sharding", None)
+    if sh is not None and hasattr(sh, "shard_shape") and shape:
+        try:
+            shape = sh.shard_shape(tuple(shape))
+        except Exception:
+            pass
+    return int(np.prod(shape)) * leaf.dtype.itemsize if shape else \
+        leaf.dtype.itemsize
+
+
+def args_bytes_per_device(abstract_args) -> int:
+    return sum(_leaf_bytes_sharded(l)
+               for l in jax.tree.leaves(abstract_args))
+
+
+def _lm_activation_bytes(arch, shape_name, mesh) -> int:
+    cfg = arch.cfg
+    spec = arch.shapes[shape_name]
+    b, s = spec["global_batch"], spec["seq_len"]
+    dp = int(np.prod([mesh.shape.get(a, 1) for a in ("pod", "data")]))
+    tp = mesh.shape.get("model", 1)
+    b_loc = max(1, b // dp)
+    bpe = 2 if cfg.dtype == jax.numpy.bfloat16 else 4
+
+    if spec["kind"] == "serve":
+        # single token: qkv + logits; cache already counted in args
+        return b_loc * cfg.vocab_size * 4 + b_loc * cfg.d_model * bpe * 8
+
+    s_saved = s // tp if cfg.seq_shard_acts else s
+    saved = cfg.n_layers * b_loc * s_saved * cfg.d_model * bpe
+
+    # within-layer peak: attention scores (chunked / SP / head-sharded)
+    chunk = cfg.attn_chunk if (cfg.attn_chunk and s > cfg.attn_chunk) else s
+    if cfg.seq_shard_attn:
+        sq_loc = max(1, chunk // tp)
+        heads_shard = 1
+    else:
+        sq_loc = chunk
+        heads_shard = tp if cfg.n_kv_heads % tp == 0 else 1
+    scores = b_loc * (cfg.n_kv_heads // heads_shard) * \
+        (cfg.n_heads // cfg.n_kv_heads) * sq_loc * s * 4
+    ffn_shard = tp if cfg.d_ff % tp == 0 else 1
+    ffn = b_loc * s * (cfg.d_ff // ffn_shard) * bpe * 2
+    moe = 0
+    if cfg.moe:
+        e_shard = tp if cfg.n_experts % tp == 0 else 1
+        cap = int(np.ceil(s * cfg.top_k / cfg.n_experts
+                          * cfg.capacity_factor))
+        moe = b_loc * (cfg.n_experts // e_shard) * cap * (
+            cfg.d_model + cfg.moe_d_ff) * bpe
+    peak_layer = max(scores + ffn, scores + moe)
+    mult = 3 if spec["kind"] == "train" else 2   # bwd/live-slack factor
+    return saved + mult * peak_layer
+
+
+def _gnn_activation_bytes(arch, shape_name, mesh) -> int:
+    spec = arch.shapes[shape_name]
+    cfg = arch.shape_cfg(shape_name)
+    dp = int(np.prod([mesh.shape.get(a, 1) for a in ("pod", "data")]))
+    if spec["mode"] == "full":
+        n, e = spec["n_nodes"], spec["n_edges"]
+        per = (n * (cfg.d_feat + 2 * cfg.d_hidden)
+               + e * (cfg.d_feat + cfg.d_hidden)) * 4
+        return 3 * per // dp
+    if spec["mode"] == "minibatch":
+        b = spec["batch_nodes"]
+        f1, f2 = spec["fanouts"]
+        nodes = 2 * b * (1 + f1 + f1 * f2)
+        return 3 * nodes * max(cfg.d_feat, cfg.d_hidden) * 4 // dp
+    g, n = spec["n_graphs"], spec["n_nodes"]
+    return 3 * 2 * g * n * max(cfg.d_feat, cfg.d_hidden) * 4 // dp
+
+
+def _recsys_activation_bytes(arch, shape_name, mesh) -> int:
+    spec = arch.shapes[shape_name]
+    cfg = arch.cfg
+    dp = int(np.prod([mesh.shape.get(a, 1) for a in ("pod", "data")]))
+    b = (spec["n_candidates"] if spec["kind"] == "retrieval"
+         else spec["batch"])
+    width = max(cfg.n_fields * cfg.embed_dim,
+                max(cfg.mlp_dims) if cfg.mlp_dims else 0,
+                cfg.n_fields * cfg.n_heads * cfg.d_attn)
+    mult = 3 if spec["kind"] == "train" else 1
+    return mult * (b // dp) * width * 4 * 2
+
+
+def activation_bytes(arch, shape_name, mesh) -> int:
+    fam = {"lm": _lm_activation_bytes, "gnn": _gnn_activation_bytes,
+           "recsys": _recsys_activation_bytes}[arch.family]
+    return int(fam(arch, shape_name, mesh))
+
+
+def grad_transient_bytes(cell, abstract_state) -> int:
+    """fp32 gradient buffer for train cells (exists between bwd and opt)."""
+    if cell.kind != "train":
+        return 0
+    params = abstract_state.get("params", {})
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        shape = leaf.shape
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None and hasattr(sh, "shard_shape") and shape:
+            try:
+                shape = sh.shard_shape(tuple(shape))
+            except Exception:
+                pass
+        total += int(np.prod(shape)) * 4
+    return total
+
+
+def memory_model(arch, shape_name, mesh, cell) -> dict:
+    if cell.kind == "train":
+        state = cell.abstract_args[0]
+        args_b = args_bytes_per_device(cell.abstract_args)
+        grad_b = grad_transient_bytes(cell, state)
+    else:
+        args_b = args_bytes_per_device(cell.abstract_args)
+        grad_b = 0
+    act_b = activation_bytes(arch, shape_name, mesh)
+    total = args_b + grad_b + act_b
+    return {
+        "state_and_args_bytes": int(args_b),
+        "grad_transient_bytes": int(grad_b),
+        "activation_bytes": int(act_b),
+        "total_bytes": int(total),
+        "fits_16GB": bool(total < 16e9),
+    }

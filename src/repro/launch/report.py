@@ -1,0 +1,113 @@
+"""Roofline report generator: dry-run JSONs -> EXPERIMENTS.md tables.
+
+Post-processes the per-cell records (no recompilation): recomputes the
+memory term with the fusion-aware analytic traffic model (roofline.py)
+alongside the raw XLA number, identifies the dominant term, and emits the
+§Dry-run + §Roofline markdown tables.
+
+  PYTHONPATH=src python -m repro.launch.report --dir results/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import get_arch
+from repro.launch.roofline import (HBM_BW, ICI_BW, PEAK_FLOPS,
+                                   analytic_bytes)
+
+
+def load_records(dir_: str, tag: str = "singlepod") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, f"{tag}__*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def enrich(rec: dict, flash_attn: bool = False) -> dict:
+    arch = get_arch(rec["arch"])
+    mem_model_bytes = analytic_bytes(arch, rec["shape"], rec["mesh"],
+                                     flash_attn)
+    r = rec["roofline"]
+    compute_s = r["compute_s"]
+    mem_s = mem_model_bytes / HBM_BW
+    coll_s = r["collective_s"]
+    bound = max(compute_s, mem_s, coll_s)
+    dom = {compute_s: "compute", mem_s: "memory",
+           coll_s: "collective"}[bound]
+    rec["roofline_model"] = {
+        "compute_s": compute_s,
+        "memory_s_model": mem_s,
+        "memory_s_xla": r["memory_s"],
+        "collective_s": coll_s,
+        "analytic_bytes_per_device": mem_model_bytes,
+        "dominant": dom,
+        "step_lower_bound_s": bound,
+        "roofline_fraction": compute_s / bound if bound else 0.0,
+    }
+    return rec
+
+
+def table(recs: list[dict]) -> str:
+    hdr = ("| arch | shape | kind | mem/dev GB | compute ms | memory ms "
+           "(model / xla) | collective ms | dominant | roofline frac | "
+           "useful ratio |\n|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for rec in recs:
+        rm = rec["roofline_model"]
+        mm = rec["memory"]["model"]
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['kind']} "
+            f"| {mm['total_bytes'] / 1e9:.2f}"
+            f"{'' if mm['fits_16GB'] else ' (!)'} "
+            f"| {rm['compute_s'] * 1e3:.2f} "
+            f"| {rm['memory_s_model'] * 1e3:.2f} / "
+            f"{rm['memory_s_xla'] * 1e3:.0f} "
+            f"| {rm['collective_s'] * 1e3:.2f} "
+            f"| {rm['dominant']} "
+            f"| {rm['roofline_fraction'] * 100:.1f}% "
+            f"| {rec.get('useful_compute_ratio') and rec['useful_compute_ratio']:.2f} |")
+    return hdr + "\n".join(rows)
+
+
+def dryrun_table(recs: list[dict]) -> str:
+    hdr = ("| arch | shape | compile s | params+state GB/dev | act GB/dev "
+           "| HLO GFLOPs/dev | coll GB/dev (AG/AR/RS/A2A/CP) | #coll |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for rec in recs:
+        mm = rec["memory"]["model"]
+        c = rec["collectives"]
+        per = "/".join(
+            f"{c.get(k, 0) / 1e9:.2f}" for k in
+            ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute"))
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['compile_s']:.0f} "
+            f"| {(mm['state_and_args_bytes'] + mm['grad_transient_bytes']) / 1e9:.2f} "
+            f"| {mm['activation_bytes'] / 1e9:.2f} "
+            f"| {rec['roofline']['hlo_flops_per_device'] / 1e9:.0f} "
+            f"| {per} | {c['count']} |")
+    return hdr + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--tag", default="singlepod")
+    ap.add_argument("--flash-attn", action="store_true")
+    args = ap.parse_args()
+    recs = [enrich(r, args.flash_attn)
+            for r in load_records(args.dir, args.tag)]
+    print("## Roofline table\n")
+    print(table(recs))
+    print("\n## Dry-run detail\n")
+    print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Encoder wrappers + registry (paper §3.3 / Appendix B).
+
+An encoder wrapper bundles:
+  * an ``encode(params, batch) -> (B, d) embeddings`` pure function,
+  * input formatting callbacks (``format_query`` / ``format_passage``),
+  * parameter construction + logical sharding axes.
+
+Subclasses self-register under ``_alias`` so experiments swap encoders via
+``--encoder_class=...`` without code changes; arbitrary user objects with
+the same duck-type also work (paper: "users can use arbitrary nn.Module
+objects as the encoder").
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+from repro.models import gnn, transformer
+from repro.sharding.partitioning import AxisRules
+
+ENCODER_REGISTRY: dict[str, type["PretrainedEncoder"]] = {}
+
+
+class PretrainedEncoder:
+    _alias = ""
+
+    def __init_subclass__(cls, **kw):
+        super().__init_subclass__(**kw)
+        if cls._alias:
+            ENCODER_REGISTRY[cls._alias] = cls
+
+    # --- model surface -----------------------------------------------------
+    def init_params(self, rng: jax.Array):
+        raise NotImplementedError
+
+    def abstract_params(self):
+        raise NotImplementedError
+
+    def param_logical_axes(self):
+        raise NotImplementedError
+
+    def axis_rules(self) -> AxisRules:
+        return AxisRules()
+
+    def encode(self, params, batch: dict[str, jax.Array], ctx=None):
+        """batch -> (B, d) L2-normalized embeddings."""
+        raise NotImplementedError
+
+    # --- input formatting (paper Appendix B: instruction prompts etc.) -----
+    def format_query(self, text: str) -> str:
+        return text
+
+    def format_passage(self, text: str, title: str = "") -> str:
+        return f"{title} {text}".strip() if title else text
+
+
+def get_encoder(alias: str, *args, **kw) -> PretrainedEncoder:
+    return ENCODER_REGISTRY[alias](*args, **kw)
+
+
+class DefaultEncoder(PretrainedEncoder):
+    """LM-transformer encoder (dense or MoE backbone)."""
+
+    _alias = "lm"
+
+    def __init__(self, cfg: transformer.LMConfig):
+        self.cfg = cfg
+
+    def init_params(self, rng):
+        return transformer.init_params(self.cfg, rng)
+
+    def abstract_params(self):
+        return transformer.abstract_params(self.cfg)
+
+    def param_logical_axes(self):
+        return transformer.param_logical_axes(self.cfg)
+
+    def axis_rules(self):
+        return transformer.LM_RULES
+
+    def encode(self, params, batch, ctx=None):
+        return transformer.encode(
+            self.cfg, params, batch["tokens"], batch["mask"], ctx)
+
+    def encode_with_aux(self, params, batch, ctx=None):
+        """(embeddings, aux loss) — MoE backbones return the load-balance
+        loss so the trainer can weight it in."""
+        hidden, aux = transformer.forward_hidden(
+            self.cfg, params, batch["tokens"], batch["mask"], ctx)
+        return transformer.pool(self.cfg, hidden, batch["mask"]), aux
+
+
+class EncoderWithInstruction(DefaultEncoder):
+    """Paper Appendix B example: E5-Mistral-style instruction formatting."""
+
+    _alias = "encoder_with_inst"
+
+    instruction = "Given a web search query, retrieve relevant passages"
+
+    def format_query(self, text: str) -> str:
+        return f"Instruct: {self.instruction}\nQuery: {text}"
+
+
+class MeanPoolEncoder(DefaultEncoder):
+    """Paper Appendix B example: overriding the pooling method."""
+
+    _alias = "encoder_mean_pool"
+
+    def __init__(self, cfg: transformer.LMConfig):
+        super().__init__(
+            cfg if cfg.pooling == "mean"
+            else cfg.__class__(**{**cfg.__dict__, "pooling": "mean"}))
+
+
+class GNNEncoder(PretrainedEncoder):
+    """GraphSAGE node/graph encoder for graph retrieval."""
+
+    _alias = "gnn"
+
+    def __init__(self, cfg: gnn.SAGEConfig):
+        self.cfg = cfg
+
+    def init_params(self, rng):
+        return gnn.init_params(self.cfg, rng)
+
+    def abstract_params(self):
+        return gnn.abstract_params(self.cfg)
+
+    def param_logical_axes(self):
+        return gnn.param_logical_axes(self.cfg)
+
+    def encode(self, params, batch, ctx=None):
+        if "feats2" in batch:
+            return gnn.forward_minibatch(
+                self.cfg, params, batch["feats0"], batch["feats1"],
+                batch["feats2"])
+        if "node_mask" in batch:
+            return gnn.forward_batched_graphs(
+                self.cfg, params, batch["x"], batch["edges"],
+                batch["edge_mask"], batch["node_mask"])
+        return gnn.forward_full(
+            self.cfg, params, batch["x"], batch["edge_src"],
+            batch["edge_dst"])

@@ -1,0 +1,846 @@
+"""LM transformer backbone for retrieval encoders (dense + MoE).
+
+Design notes (see DESIGN.md §3-§5):
+  * decoder-style (causal) transformer; retrieval embeddings via pooled
+    hidden states (RepLLaMA-style last-token pooling by default).
+  * weights stored 4D/stacked-over-layers so a single ``lax.scan`` runs the
+    whole stack: compact HLO (fast 512-way SPMD compiles) and natural remat.
+  * GQA attention with RoPE; GLU FFNs (GeGLU/SwiGLU); optional QKV biases.
+  * MoE: token-choice top-k with per-row capacity, gather-based dispatch and
+    combine (no one-hot einsum dispatch: dispatch FLOPs are O(tokens), not
+    O(tokens x E x C)).  Interleaved dense/MoE stacks supported (Llama-4).
+  * sharding: logical axes resolved by repro.sharding.partitioning.
+    FSDP: the d_model dim of all weight matrices is sharded over the
+    data-parallel axes ("pod","data"); TP: heads / ffn / experts over
+    "model"; divisibility guard falls back to replication.
+  * KV-cache decode for serving; cache seq dim shardable ("kv_seq") for
+    long-context decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.partitioning import AxisRules
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str = "lm"
+    n_layers: int = 2
+    d_model: int = 64
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 16
+    d_ff: int = 128
+    vocab_size: int = 1024
+    activation: str = "swiglu"      # swiglu | geglu | gelu
+    norm: str = "rmsnorm"           # rmsnorm | layernorm
+    qkv_bias: bool = False
+    tie_embeddings: bool = True
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1              # 1: every layer MoE; 2: interleaved dense/MoE
+    n_shared_experts: int = 0
+    moe_d_ff: int = 0               # per-expert hidden dim
+    capacity_factor: float = 1.25
+    # misc
+    rope_theta: float = 10000.0
+    max_seq_len: int = 8192
+    pooling: str = "last"           # last | mean | first
+    dtype: Any = jnp.bfloat16
+    attn_chunk: int = 0             # >0: chunked (memory-bounded) attention
+    remat: bool = True
+    logit_softcap: float = 0.0
+    scan_layers: bool = True        # False: unrolled (exact HLO cost/roofline)
+    seq_shard_attn: bool = False    # SP: shard scores' Sq dim over "model"
+                                    # (for head counts not divisible by TP)
+    seq_shard_acts: bool = False    # Megatron-SP: residual stream between
+                                    # layers kept seq-sharded over "model"
+                                    # (remat-saved activations shrink TP-fold)
+    inline_mask: bool = False       # §Perf: build the causal mask inside the
+                                    # attention fusion from 1-D position
+                                    # vectors instead of materializing and
+                                    # distributing a (B,S,S) bool tensor
+    dus_cache_update: bool = False  # §Perf: decode writes the new K/V with
+                                    # dynamic_update_slice instead of a
+                                    # full-cache where-rewrite
+    moe_impl: str = "pjit"          # §Perf: "shardmap" shards the capacity
+                                    # dim over "model" with replicated expert
+                                    # weights, combines locally and psums a
+                                    # (B,S,d) partial — removes the
+                                    # (B,E,cap,·) buffer all-reduces of the
+                                    # per-expert-FFN TP sharding
+
+    @property
+    def n_dense_layers(self) -> int:
+        if not self.moe:
+            return self.n_layers
+        if self.moe_every == 1:
+            return 0
+        return self.n_layers // 2
+
+    @property
+    def n_moe_layers(self) -> int:
+        if not self.moe:
+            return 0
+        if self.moe_every == 1:
+            return self.n_layers
+        return self.n_layers - self.n_dense_layers
+
+    def param_count(self) -> int:
+        leaves = jax.tree.leaves(abstract_params(self))
+        return int(sum(np.prod(l.shape) for l in leaves))
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k + shared experts only)."""
+        total = self.param_count()
+        if not self.moe:
+            return total
+        per_expert = 3 * self.d_model * self.moe_d_ff
+        inactive = self.n_moe_layers * per_expert * (
+            self.n_experts - self.top_k)
+        return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def _attn_shapes(cfg: LMConfig) -> dict[str, tuple[int, ...]]:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    shapes = {
+        "wq": (d, h, hd), "wk": (d, k, hd), "wv": (d, k, hd),
+        "wo": (h, hd, d), "ln1": (d,), "ln2": (d,),
+    }
+    if cfg.qkv_bias:
+        shapes.update({"bq": (h, hd), "bk": (k, hd), "bv": (k, hd)})
+    if cfg.norm == "layernorm":
+        shapes.update({"ln1_b": (d,), "ln2_b": (d,)})
+    return shapes
+
+
+def _dense_ffn_shapes(cfg: LMConfig) -> dict[str, tuple[int, ...]]:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.activation in ("swiglu", "geglu"):
+        return {"wi_gate": (d, f), "wi_up": (d, f), "wo_ffn": (f, d)}
+    return {"wi_up": (d, f), "wo_ffn": (f, d)}
+
+
+def _moe_ffn_shapes(cfg: LMConfig) -> dict[str, tuple[int, ...]]:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    shapes = {
+        "router": (d, e),
+        "we_gate": (e, d, f), "we_up": (e, d, f), "we_down": (e, f, d),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.moe_d_ff * cfg.n_shared_experts
+        shapes.update({"ws_gate": (d, fs), "ws_up": (d, fs), "ws_down": (fs, d)})
+    return shapes
+
+
+_AXES = {
+    # attention — d_model rows FSDP-sharded, heads TP-sharded
+    "wq": ("fsdp", "heads", None), "wk": ("fsdp", "kv_heads", None),
+    "wv": ("fsdp", "kv_heads", None), "wo": ("heads", None, "fsdp"),
+    "bq": ("heads", None), "bk": ("kv_heads", None), "bv": ("kv_heads", None),
+    "ln1": (None,), "ln2": (None,), "ln1_b": (None,), "ln2_b": (None,),
+    # dense FFN
+    "wi_gate": ("fsdp", "ffn"), "wi_up": ("fsdp", "ffn"),
+    "wo_ffn": ("ffn", "fsdp"),
+    # MoE
+    "router": ("fsdp", None),
+    "we_gate": ("experts", "fsdp", "expert_ffn"),
+    "we_up": ("experts", "fsdp", "expert_ffn"),
+    "we_down": ("experts", "expert_ffn", "fsdp"),
+    "ws_gate": ("fsdp", "ffn"), "ws_up": ("fsdp", "ffn"),
+    "ws_down": ("ffn", "fsdp"),
+    # top level
+    "embed": ("vocab", "embed"),
+    "final_ln": (None,), "final_ln_b": (None,),
+}
+
+# FSDP rule: weight rows sharded over the data-parallel axes.
+# seq_model: sequence-parallel attention dim (used when heads % TP != 0).
+LM_RULES = AxisRules().with_overrides(fsdp=("pod", "data"),
+                                      seq_model=("model",),
+                                      kv_seq_full=("pod", "data", "model"))
+
+
+def _block_shapes(cfg: LMConfig, kind: str) -> dict[str, tuple[int, ...]]:
+    shapes = dict(_attn_shapes(cfg))
+    shapes.update(_moe_ffn_shapes(cfg) if kind == "moe"
+                  else _dense_ffn_shapes(cfg))
+    return shapes
+
+
+def _stack_layout(cfg: LMConfig) -> dict[str, int]:
+    """Which stacked blocks exist and their depth."""
+    layout: dict[str, int] = {}
+    if cfg.n_dense_layers:
+        layout["blocks"] = cfg.n_dense_layers
+    if cfg.n_moe_layers:
+        layout["moe_blocks"] = cfg.n_moe_layers
+    return layout
+
+
+def abstract_params(cfg: LMConfig) -> Params:
+    p: Params = {
+        "embed": jax.ShapeDtypeStruct(
+            (cfg.vocab_size, cfg.d_model), cfg.dtype),
+        "final_ln": jax.ShapeDtypeStruct((cfg.d_model,), cfg.dtype),
+    }
+    if cfg.norm == "layernorm":
+        p["final_ln_b"] = jax.ShapeDtypeStruct((cfg.d_model,), cfg.dtype)
+    for stack, depth in _stack_layout(cfg).items():
+        kind = "moe" if stack == "moe_blocks" else "dense"
+        p[stack] = {
+            k: jax.ShapeDtypeStruct((depth,) + shp, cfg.dtype)
+            for k, shp in _block_shapes(cfg, kind).items()
+        }
+    return p
+
+
+def param_logical_axes(cfg: LMConfig) -> Params:
+    ab = abstract_params(cfg)
+
+    def axes_for(path: tuple, leaf) -> tuple:
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        base = _AXES[key]
+        if len(base) + 1 == len(leaf.shape):      # stacked over layers
+            return ("layers",) + base
+        return base
+
+    return jax.tree_util.tree_map_with_path(axes_for, ab)
+
+
+def init_params(cfg: LMConfig, rng: jax.Array) -> Params:
+    ab = abstract_params(cfg)
+    paths_leaves = jax.tree_util.tree_flatten_with_path(ab)[0]
+    treedef = jax.tree.structure(ab)
+    keys = jax.random.split(rng, len(paths_leaves))
+
+    def init_leaf(key, path, leaf):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name.startswith(("ln", "final_ln")) and not name.endswith("_b"):
+            return jnp.ones(leaf.shape, leaf.dtype)        # norm scales
+        if name.startswith("b") or name.endswith("_b"):
+            return jnp.zeros(leaf.shape, leaf.dtype)       # biases
+        scale = 0.02
+        return (scale * jax.random.normal(key, leaf.shape, jnp.float32)
+                ).astype(leaf.dtype)
+
+    inited = [init_leaf(k, p, l) for k, (p, l) in zip(keys, paths_leaves)]
+    return jax.tree.unflatten(treedef, inited)
+
+
+# ---------------------------------------------------------------------------
+# Core ops
+# ---------------------------------------------------------------------------
+
+def _norm(x, scale, bias=None, kind="rmsnorm", eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * scale.astype(jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def _rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding.  x: (..., seq, heads, head_dim), positions (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _act(x, kind):
+    if kind in ("swiglu", "silu"):
+        return jax.nn.silu(x)
+    if kind in ("geglu", "gelu"):
+        return jax.nn.gelu(x)
+    raise ValueError(kind)
+
+
+def _attn_scores_softmax(q, k, v, mask, softcap=0.0, ctx=None, sp=False):
+    """q: (B,Sq,H,hd)  k/v: (B,Skv,K,hd).
+
+    ``mask`` is either a dense (B,Sq,Skv) bool tensor, or — §Perf inline
+    variant — a ``(q_pos (B,Sq), kv_pos (B,Skv), kv_valid (B,Skv))`` tuple
+    from which the causal mask is built inside the softmax fusion (no
+    (B,S,S) tensor is materialized or distributed).
+
+    The (B,K,G,Sq,Skv) score tensor is explicitly sharding-constrained:
+    kv-heads over "model" when divisible, else the Sq dim (SP).  Relying
+    on propagation from q is not enough — the batch-only-sharded mask in
+    the ``where`` can win propagation and replicate the scores.
+    """
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    group = h // kh
+    score_axes = ("batch", "kv_heads", None,
+                  "seq_model" if (sp and sq > 1) else None, None)
+    qg = q.reshape(b, sq, kh, group, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = _constrain(scores, score_axes, ctx)
+    scores = scores / np.sqrt(hd).astype(np.float32)
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    if isinstance(mask, tuple):
+        q_pos, kv_pos, kv_valid = mask
+        mask = (kv_pos[:, None, :] <= q_pos[:, :, None]) \
+            & kv_valid[:, None, :].astype(bool)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = _constrain(probs, score_axes, ctx)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _attention(cfg: LMConfig, q, k, v, mask, ctx=None):
+    """Optionally query-chunked attention (bounded score-matrix memory)."""
+    sq = q.shape[1]
+    chunk = cfg.attn_chunk
+    if not chunk or sq <= chunk or sq % chunk != 0:
+        return _attn_scores_softmax(q, k, v, mask, cfg.logit_softcap, ctx,
+                                    cfg.seq_shard_attn)
+
+    nchunks = sq // chunk
+    qs = q.reshape(q.shape[0], nchunks, chunk, *q.shape[2:]).swapaxes(0, 1)
+    if isinstance(mask, tuple):
+        q_pos, kv_pos, kv_valid = mask
+        mchunks = q_pos.reshape(q_pos.shape[0], nchunks, chunk
+                                ).swapaxes(0, 1)
+        mk = lambda mc: (mc, kv_pos, kv_valid)
+    else:
+        mchunks = mask.reshape(mask.shape[0], nchunks, chunk,
+                               mask.shape[-1]).swapaxes(0, 1)
+        mk = lambda mc: mc
+
+    def body(_, qc_maskc):
+        qc, mc = qc_maskc
+        return (), _attn_scores_softmax(qc, k, v, mk(mc),
+                                        cfg.logit_softcap, ctx,
+                                        cfg.seq_shard_attn)
+
+    _, outs = jax.lax.scan(jax.checkpoint(body), (), (qs, mchunks))
+    out = outs.swapaxes(0, 1).reshape(q.shape)
+    return out
+
+
+def _attn_block(cfg: LMConfig, lp: Params, x, positions, mask, ctx):
+    h = _norm(x, lp["ln1"], lp.get("ln1_b"), cfg.norm)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lp["bq"], k + lp["bk"], v + lp["bv"]
+    q = _rope(q, positions, cfg.rope_theta)
+    k = _rope(k, positions, cfg.rope_theta)
+    if cfg.seq_shard_attn and q.shape[1] > 1:
+        # sequence parallelism: when the head count does not divide the TP
+        # axis, shard the *query sequence* dim of attention over "model"
+        # instead — the (B,*,Sq,Skv) score tensor shrinks TP-fold.
+        q = _constrain(q, ("batch", "seq_model", "heads", None), ctx)
+    else:
+        q = _constrain(q, ("batch", None, "heads", None), ctx)
+    k = _constrain(k, ("batch", None, "kv_heads", None), ctx)
+    out = _attention(cfg, q, k, v, mask, ctx)
+    out = jnp.einsum("bshk,hkd->bsd", out, lp["wo"])
+    return x + out
+
+
+def _dense_ffn(cfg: LMConfig, lp: Params, x, ctx):
+    h = _norm(x, lp["ln2"], lp.get("ln2_b"), cfg.norm)
+    return x + _glu(cfg, h, lp["wi_gate"] if "wi_gate" in lp else None,
+                    lp["wi_up"], lp["wo_ffn"], ctx)
+
+
+def _glu(cfg, h, w_gate, w_up, w_down, ctx):
+    up = jnp.einsum("bsd,df->bsf", h, w_up)
+    if w_gate is not None:
+        gate = _act(jnp.einsum("bsd,df->bsf", h, w_gate), cfg.activation)
+        up = gate * up
+    else:
+        up = _act(up, cfg.activation)
+    up = _constrain(up, ("batch", None, "ffn"), ctx)
+    return jnp.einsum("bsf,fd->bsd", up, w_down)
+
+
+def _constrain(x, logical_axes, ctx):
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = rules.spec_for(logical_axes, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# MoE block: token-choice top-k, per-row capacity, gather dispatch/combine
+# ---------------------------------------------------------------------------
+
+def _moe_ffn(cfg: LMConfig, lp: Params, x, ctx):
+    b, s, d = x.shape
+    e, kk = cfg.n_experts, cfg.top_k
+    cap = int(np.ceil(s * kk / e * cfg.capacity_factor))
+    cap = max(cap, 1)
+
+    h = _norm(x, lp["ln2"], lp.get("ln2_b"), cfg.norm)
+    logits = jnp.einsum("bsd,de->bse", h, lp["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, choice = jax.lax.top_k(probs, kk)                 # (b,s,k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+
+    # auxiliary load-balance loss (Switch): mean fraction x mean prob
+    density = jnp.mean(
+        jax.nn.one_hot(choice[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(density * jnp.mean(probs, axis=(0, 1)))
+
+    # slot ordering: (s, k) flattened, s-major -> stable positions
+    e_flat = choice.reshape(b, s * kk)                        # (b, sk)
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)       # (b, sk, e)
+    pos = jnp.cumsum(onehot, axis=1) - onehot                 # rank within expert
+    pos = jnp.take_along_axis(
+        pos, e_flat[..., None], axis=-1)[..., 0]              # (b, sk)
+    keep = pos < cap
+
+    sentinel = e * cap
+    slot = jnp.where(keep, e_flat * cap + pos, sentinel)      # (b, sk)
+
+    # dispatch: scatter token indices into (e*cap) slots, then gather rows
+    tok_idx = jnp.broadcast_to(
+        jnp.arange(s * kk, dtype=jnp.int32) // kk, (b, s * kk))
+    dest = jnp.full((b, e * cap + 1), s, dtype=jnp.int32)     # s == pad row
+    brow = jnp.broadcast_to(jnp.arange(b)[:, None], (b, s * kk))
+    dest = dest.at[brow, slot].set(tok_idx)
+    dest = dest[:, : e * cap]                                 # (b, e*cap)
+
+    h_pad = jnp.concatenate([h, jnp.zeros((b, 1, d), h.dtype)], axis=1)
+    xin = jnp.take_along_axis(
+        h_pad, dest[..., None], axis=1).reshape(b, e, cap, d)
+    xin = _constrain(xin, ("batch", "experts", None, None), ctx)
+
+    gate_h = _act(jnp.einsum("becd,edf->becf", xin, lp["we_gate"]),
+                  cfg.activation)
+    up_h = jnp.einsum("becd,edf->becf", xin, lp["we_up"])
+    hidden = gate_h * up_h
+    hidden = _constrain(hidden, ("batch", "experts", None, "expert_ffn"), ctx)
+    out = jnp.einsum("becf,efd->becd", hidden, lp["we_down"])
+    out = _constrain(out, ("batch", "experts", None, None), ctx)
+
+    # combine: gather each token's expert outputs back, weight by gates
+    out_flat = out.reshape(b, e * cap, d)
+    out_pad = jnp.concatenate(
+        [out_flat, jnp.zeros((b, 1, d), out.dtype)], axis=1)
+    back = jnp.take_along_axis(out_pad, slot[..., None], axis=1)  # (b, sk, d)
+    back = back.reshape(b, s, kk, d)
+    y = jnp.sum(back * gates[..., None].astype(back.dtype), axis=2)
+
+    if cfg.n_shared_experts:
+        y = y + _glu(cfg, h, lp["ws_gate"], lp["ws_up"], lp["ws_down"], ctx)
+    return x + y.astype(x.dtype), aux
+
+
+def _moe_ffn_shardmap(cfg: LMConfig, lp: Params, x, ctx):
+    """§Perf MoE: capacity-dim sharding over "model" via shard_map.
+
+    Expert weights are replicated over "model" (they are small when this
+    path is chosen: E not divisible by TP); each rank gathers and computes
+    only its cap/TP slice of the (B,E,cap,·) buffer, scatter-adds its
+    slots' contributions into a local (B,S,d) partial, and a single psum
+    of that partial replaces the per-layer capacity-buffer all-reduces.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh, rules = ctx
+    tp = mesh.shape.get("model", 1)
+    b, s, d = x.shape
+    e, kk = cfg.n_experts, cfg.top_k
+    cap = int(np.ceil(s * kk / e * cfg.capacity_factor))
+    cap = max(tp, -(-cap // tp) * tp)                    # pad to TP multiple
+
+    h = _norm(x, lp["ln2"], lp.get("ln2_b"), cfg.norm)
+    logits = jnp.einsum("bsd,de->bse", h, lp["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, choice = jax.lax.top_k(probs, kk)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+    density = jnp.mean(
+        jax.nn.one_hot(choice[..., 0], e, dtype=jnp.float32), axis=(0, 1))
+    aux = e * jnp.sum(density * jnp.mean(probs, axis=(0, 1)))
+
+    e_flat = choice.reshape(b, s * kk)
+    onehot = jax.nn.one_hot(e_flat, e, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.take_along_axis(pos, e_flat[..., None], axis=-1)[..., 0]
+    keep = pos < cap
+    sentinel = e * cap
+    slot = jnp.where(keep, e_flat * cap + pos, sentinel)
+    tok_idx = jnp.broadcast_to(
+        jnp.arange(s * kk, dtype=jnp.int32) // kk, (b, s * kk))
+    brow = jnp.broadcast_to(jnp.arange(b)[:, None], (b, s * kk))
+    dest = jnp.full((b, e * cap + 1), s, dtype=jnp.int32)
+    dest = dest.at[brow, slot].set(tok_idx)[:, : e * cap]   # (b, e*cap)
+    gate_slot = jnp.zeros((b, e * cap + 1), jnp.float32)
+    gate_slot = gate_slot.at[brow, slot].set(
+        gates.reshape(b, s * kk))[:, : e * cap]             # (b, e*cap)
+
+    dest3 = dest.reshape(b, e, cap)
+    gate3 = gate_slot.reshape(b, e, cap)
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    bspec = batch_axes if (batch_axes and b % int(
+        np.prod([mesh.shape[a] for a in batch_axes])) == 0) else None
+
+    def local_fn(h_loc, dest_loc, gate_loc, wg, wu, wd):
+        bl, sl, _ = h_loc.shape
+        cl = dest_loc.shape[-1]
+        h_pad = jnp.concatenate(
+            [h_loc, jnp.zeros((bl, 1, d), h_loc.dtype)], axis=1)
+        flat = dest_loc.reshape(bl, e * cl)
+        xin = jnp.take_along_axis(
+            h_pad, flat[..., None], axis=1).reshape(bl, e, cl, d)
+        gate_h = _act(jnp.einsum("becd,edf->becf", xin, wg),
+                      cfg.activation)
+        up_h = jnp.einsum("becd,edf->becf", xin, wu)
+        out = jnp.einsum("becf,efd->becd", gate_h * up_h, wd)
+        out = out * gate_loc[..., None].astype(out.dtype)
+        # local combine: scatter-add this rank's slots into (b, s, d)
+        br = jnp.broadcast_to(jnp.arange(bl)[:, None], (bl, e * cl))
+        y = jnp.zeros((bl, sl + 1, d), jnp.float32)
+        y = y.at[br, flat].add(out.reshape(bl, e * cl, d))
+        # accumulate locally in fp32; cross-rank wire in the model dtype
+        y = y[:, :sl].astype(h_loc.dtype)
+        return jax.lax.psum(y, "model")
+
+    y = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(bspec, None, None), P(bspec, None, "model"),
+                  P(bspec, None, "model"), P(), P(), P()),
+        out_specs=P(bspec, None, None),
+        check_rep=False,
+    )(h, dest3, gate3, lp["we_gate"], lp["we_up"], lp["we_down"])
+
+    if cfg.n_shared_experts:
+        y = y + _glu(cfg, h, lp["ws_gate"], lp["ws_up"], lp["ws_down"], ctx)
+    return x + y.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Full stack
+# ---------------------------------------------------------------------------
+
+def _scan_stack(cfg, stacked, body, x, positions, mask, ctx):
+    def step(carry, lp):
+        h, aux = carry
+        h, a = body(lp, h)
+        return (h, aux + a), None
+
+    fn = jax.checkpoint(step) if cfg.remat else step
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.float32(0.0)), stacked)
+    return x, aux
+
+
+def forward_hidden(cfg: LMConfig, params: Params, tokens, attn_mask,
+                   ctx=None):
+    """tokens (B,S) int32, attn_mask (B,S) {0,1} -> hidden (B,S,d), aux loss."""
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
+    if cfg.name.startswith("gemma"):
+        # keep the scale in the model dtype: an np.float32 scalar would
+        # promote the whole residual stream to fp32 (2x HBM + wire)
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    x = _constrain(x, ("batch", None, None), ctx)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if cfg.inline_mask:
+        # §Perf: causal mask built inside the attention fusion from 1-D
+        # position vectors — no (B,S,S) bool tensor exists in HBM / on wire
+        mask = (positions, positions, attn_mask)
+    else:
+        causal = jnp.tril(jnp.ones((s, s), bool))
+        mask = causal[None] & attn_mask[:, None, :].astype(bool)
+
+    def boundary(h):
+        # Megatron-SP: keep the residual stream sequence-sharded between
+        # layers so remat-saved activations are TP-fold smaller; each layer
+        # re-gathers at its LayerNorm.
+        if cfg.seq_shard_acts and h.shape[1] > 1:
+            return _constrain(h, ("batch", "seq_model", None), ctx)
+        return h
+
+    def dense_body(lp, h):
+        h = _attn_block(cfg, lp, h, positions, mask, ctx)
+        h = _dense_ffn(cfg, lp, h, ctx)
+        return boundary(h), jnp.float32(0.0)
+
+    moe_fn = (_moe_ffn_shardmap
+              if cfg.moe_impl == "shardmap" and ctx is not None
+              else _moe_ffn)
+
+    def moe_body(lp, h):
+        h = _attn_block(cfg, lp, h, positions, mask, ctx)
+        h, aux = moe_fn(cfg, lp, h, ctx)
+        return boundary(h), aux
+
+    aux_total = jnp.float32(0.0)
+    if not cfg.scan_layers:
+        # unrolled stack: exact XLA cost/memory analysis (HLO while-loop
+        # bodies are counted once by HloCostAnalysis — scan under-reports)
+        def layer_of(stack, i):
+            return jax.tree.map(lambda a: a[i], params[stack])
+
+        def run(body, lp, h):
+            fn = jax.checkpoint(lambda l, hh: body(l, hh)) if cfg.remat \
+                else body
+            return fn(lp, h)
+
+        for i in range(cfg.n_layers):
+            if not cfg.moe:
+                x, a = run(dense_body, layer_of("blocks", i), x)
+            elif cfg.moe_every == 1:
+                x, a = run(moe_body, layer_of("moe_blocks", i), x)
+            elif i % 2 == 0:
+                x, a = run(dense_body, layer_of("blocks", i // 2), x)
+            else:
+                x, a = run(moe_body, layer_of("moe_blocks", i // 2), x)
+            aux_total += a
+    elif not cfg.moe:
+        x, aux = _scan_stack(cfg, params["blocks"], dense_body, x,
+                             positions, mask, ctx)
+        aux_total += aux
+    elif cfg.moe_every == 1:
+        x, aux = _scan_stack(cfg, params["moe_blocks"], moe_body, x,
+                             positions, mask, ctx)
+        aux_total += aux
+    else:
+        # interleaved: scan over (dense, moe) layer pairs
+        def pair_body(carry, lps):
+            h, aux = carry
+            dlp, mlp = lps
+            h, _ = dense_body(dlp, h)
+            h, a = moe_body(mlp, h)
+            return (h, aux + a), None
+
+        fn = jax.checkpoint(pair_body) if cfg.remat else pair_body
+        (x, aux_total), _ = jax.lax.scan(
+            fn, (x, aux_total), (params["blocks"], params["moe_blocks"]))
+
+    x = _norm(x, params["final_ln"], params.get("final_ln_b"), cfg.norm)
+    return x, aux_total
+
+
+def pool(cfg: LMConfig, hidden, attn_mask):
+    maskf = attn_mask.astype(jnp.float32)[..., None]
+    if cfg.pooling == "mean":
+        emb = (hidden * maskf).sum(1) / jnp.clip(maskf.sum(1), 1e-6)
+    elif cfg.pooling == "first":
+        emb = hidden[:, 0]
+    else:  # last non-pad token
+        idx = jnp.clip(attn_mask.sum(-1).astype(jnp.int32) - 1, 0)
+        emb = jnp.take_along_axis(hidden, idx[:, None, None], axis=1)[:, 0]
+    emb = emb.astype(jnp.float32)
+    return emb / jnp.clip(jnp.linalg.norm(emb, axis=-1, keepdims=True), 1e-9)
+
+
+def encode(cfg: LMConfig, params: Params, tokens, attn_mask, ctx=None):
+    """Retrieval embedding: (B,S) -> (B,d) L2-normalized (fp32)."""
+    hidden, _ = forward_hidden(cfg, params, tokens, attn_mask, ctx)
+    return pool(cfg, hidden, attn_mask)
+
+
+def lm_logits(cfg: LMConfig, params: Params, hidden):
+    return jnp.einsum("bsd,vd->bsv", hidden, params["embed"],
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: LMConfig, batch: int, max_len: int) -> Params:
+    kv = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(kv, cfg.dtype),
+        "v": jnp.zeros(kv, cfg.dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_logical_axes(cfg: LMConfig, batch: int,
+                       tp_divides_kv: bool = True) -> Params:
+    """KV-cache sharding (DESIGN.md §5):
+      batch==1 (long-context): seq over the data axes (+ model when the
+        kv-head count does not divide TP — flash-decoding both ways);
+      batch>1: batch over data; kv-heads over model when divisible, else
+        the cache seq dim takes the model axis."""
+    if batch == 1:
+        seq_axis = "kv_seq" if tp_divides_kv else "kv_seq_full"
+        kv = ("layers", None, seq_axis, "kv_heads", None)
+    elif tp_divides_kv:
+        kv = ("layers", "batch", None, "kv_heads", None)
+    else:
+        kv = ("layers", "batch", "seq_model", None, None)
+    return {"k": kv, "v": kv, "len": ()}
+
+
+def decode_step(cfg: LMConfig, params: Params, cache: Params,
+                tokens: jax.Array, ctx=None):
+    """One decode step.  tokens (B,) int32.  Returns (logits (B,V), cache).
+
+    The new token attends to `cache[:len]` plus itself; its K/V are written
+    at position `len`.  Works under pjit with the cache sharded per
+    ``cache_logical_axes`` (long-context: seq-sharded => flash-decoding-style
+    sharded softmax reductions are inserted by SPMD).  The layer stack is a
+    ``lax.scan`` whose xs carry both the stacked params and the per-layer
+    cache slices, so no traced layer indexing is needed.
+    """
+    b = tokens.shape[0]
+    max_len = cache["k"].shape[2]
+    pos = cache["len"]
+    x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(cfg.dtype)
+    if cfg.name.startswith("gemma"):
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    valid = jnp.arange(max_len)[None, None, :] <= pos       # (1,1,S)
+    valid = jnp.broadcast_to(valid, (b, 1, max_len))
+    at_pos = (jnp.arange(max_len) == pos)[None, :, None, None]
+
+    def sublayer(h, lp, kc, vc, kind):
+        hn = _norm(h, lp["ln1"], lp.get("ln1_b"), cfg.norm)
+        q = jnp.einsum("bsd,dhk->bshk", hn, lp["wq"])
+        k1 = jnp.einsum("bsd,dhk->bshk", hn, lp["wk"])
+        v1 = jnp.einsum("bsd,dhk->bshk", hn, lp["wv"])
+        if cfg.qkv_bias:
+            q, k1, v1 = q + lp["bq"], k1 + lp["bk"], v1 + lp["bv"]
+        q = _rope(q, positions, cfg.rope_theta)
+        k1 = _rope(k1, positions, cfg.rope_theta)
+        kc = jnp.where(at_pos, k1, kc)      # new token's K/V visible to self
+        vc = jnp.where(at_pos, v1, vc)
+        out = _attn_scores_softmax(q, kc, vc, valid, cfg.logit_softcap, ctx)
+        h = h + jnp.einsum("bshk,hkd->bsd", out, lp["wo"])
+        hn2 = _norm(h, lp["ln2"], lp.get("ln2_b"), cfg.norm)
+        if kind == "dense":
+            y = _glu(cfg, hn2, lp.get("wi_gate"), lp["wi_up"], lp["wo_ffn"],
+                     ctx)
+        else:
+            y = _moe_token(cfg, lp, hn2, ctx)
+        return h + y, k1, v1
+
+    ck, cv = cache["k"], cache["v"]
+    if not cfg.scan_layers:
+        ks, vs = [], []
+        for i in range(cfg.n_layers):
+            if not cfg.moe:
+                lp, kind = jax.tree.map(lambda a: a[i],
+                                        params["blocks"]), "dense"
+            elif cfg.moe_every == 1:
+                lp, kind = jax.tree.map(lambda a: a[i],
+                                        params["moe_blocks"]), "moe"
+            elif i % 2 == 0:
+                lp, kind = jax.tree.map(lambda a: a[i // 2],
+                                        params["blocks"]), "dense"
+            else:
+                lp, kind = jax.tree.map(lambda a: a[i // 2],
+                                        params["moe_blocks"]), "moe"
+            x, k1, v1 = sublayer(x, lp, ck[i], cv[i], kind)
+            ks.append(k1)
+            vs.append(v1)
+        nk, nv = jnp.stack(ks), jnp.stack(vs)
+    elif not cfg.moe:
+        def body(h, xs):
+            lp, kc, vc = xs
+            h, k1, v1 = sublayer(h, lp, kc, vc, "dense")
+            return h, (k1, v1)
+        x, (nk, nv) = jax.lax.scan(body, x, (params["blocks"], ck, cv))
+    elif cfg.moe_every == 1:
+        def body(h, xs):
+            lp, kc, vc = xs
+            h, k1, v1 = sublayer(h, lp, kc, vc, "moe")
+            return h, (k1, v1)
+        x, (nk, nv) = jax.lax.scan(body, x, (params["moe_blocks"], ck, cv))
+    else:
+        half = cfg.n_layers // 2
+        ckp = ck.reshape(half, 2, *ck.shape[1:])
+        cvp = cv.reshape(half, 2, *cv.shape[1:])
+
+        def body(h, xs):
+            dlp, mlp, kc2, vc2 = xs
+            h, k0, v0 = sublayer(h, dlp, kc2[0], vc2[0], "dense")
+            h, k1, v1 = sublayer(h, mlp, kc2[1], vc2[1], "moe")
+            return h, (jnp.stack([k0, k1]), jnp.stack([v0, v1]))
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["blocks"], params["moe_blocks"], ckp, cvp))
+        nk = nk.reshape(cfg.n_layers, *nk.shape[2:])
+        nv = nv.reshape(cfg.n_layers, *nv.shape[2:])
+
+    x = _norm(x, params["final_ln"], params.get("final_ln_b"), cfg.norm)
+    logits = lm_logits(cfg, params, x)[:, 0]
+    if cfg.dus_cache_update:
+        # §Perf: O(L*B*K*hd) in-place write instead of a full-cache
+        # where-rewrite (which reads+writes the entire cache every step)
+        zero = jnp.zeros((), jnp.int32)
+        cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], nk, (zero, zero, pos, zero, zero)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], nv, (zero, zero, pos, zero, zero)),
+            "len": pos + 1,
+        }
+    else:
+        upd = at_pos[None]                   # (1,1,S,1,1) over (L,B,S,K,hd)
+        cache = {
+            "k": jnp.where(upd, nk, cache["k"]),
+            "v": jnp.where(upd, nv, cache["v"]),
+            "len": pos + 1,
+        }
+    return logits, cache
+
+
+def _moe_token(cfg: LMConfig, lp: Params, h, ctx):
+    """MoE for S==1 (decode): gather only the chosen experts' weights.
+
+    FLOPs are O(B x top_k x d x f) — the weight *gather* (not compute) is
+    the cost, which matches the memory-bound reality of MoE decode.
+    """
+    b, s, d = h.shape
+    hh = h.reshape(b * s, d)
+    logits = jnp.einsum("td,de->te", hh, lp["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gates, choice = jax.lax.top_k(probs, cfg.top_k)          # (t,k)
+    gates = gates / jnp.clip(gates.sum(-1, keepdims=True), 1e-9)
+    wg = jnp.take(lp["we_gate"], choice, axis=0)             # (t,k,d,f)
+    wu = jnp.take(lp["we_up"], choice, axis=0)
+    wd = jnp.take(lp["we_down"], choice, axis=0)             # (t,k,f,d)
+    gate_h = _act(jnp.einsum("td,tkdf->tkf", hh, wg), cfg.activation)
+    up_h = jnp.einsum("td,tkdf->tkf", hh, wu)
+    out = jnp.einsum("tkf,tkfd->tkd", gate_h * up_h, wd)
+    y = jnp.sum(out * gates[..., None].astype(out.dtype), axis=1)
+    y = y.reshape(b, s, d)
+    if cfg.n_shared_experts:
+        y = y + _glu(cfg, h, lp["ws_gate"], lp["ws_up"], lp["ws_down"], ctx)
+    return y

@@ -1,0 +1,165 @@
+"""Logical-axis partitioning rules -> concrete ``PartitionSpec``s.
+
+Parameters and activations are annotated with *logical* axis names
+("vocab", "heads", "ffn", "experts", "batch", "kv_seq", ...).  At lowering
+time the rules below resolve each logical axis to a mesh axis, guarded by
+divisibility: jit input shardings must divide the dimension evenly (GSPMD
+does not pad *inputs*), so a logical axis whose size is not divisible by
+its mesh axis falls back to replication.  This keeps every
+(arch x shape x mesh) cell compilable while preserving the intended
+sharding wherever the architecture's dimensions allow it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Default logical -> mesh-axis mapping.  "batch"-like axes span the
+# data-parallel axes (pod composes with data so adding pods scales DP);
+# "model"-like axes carry tensor/expert parallelism.
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # data-parallel axes
+    "batch": ("pod", "data"),
+    "corpus": ("pod", "data"),          # corpus shards at inference
+    "candidates": ("pod", "data"),      # recsys retrieval candidates
+    "nodes": ("pod", "data"),           # GNN node tables
+    "edges": ("pod", "data"),           # GNN edge lists
+    "kv_seq": ("pod", "data"),          # long-context decode: shard the KV cache
+    # model-parallel axes
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "ffn": ("model",),
+    "experts": ("model",),
+    "expert_ffn": ("model",),
+    "embed_rows": ("model",),           # recsys embedding-table rows
+    "embed": ("model",),                # d_model sharding of embedding tables
+    # replicated
+    "layers": (),
+    "d_model": (),
+    "pos": (),
+    "dense": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Resolves logical axis names against a concrete mesh."""
+
+    rules: Mapping[str, tuple[str, ...]] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES)
+    )
+
+    def with_overrides(self, **overrides: tuple[str, ...]) -> "AxisRules":
+        merged = dict(self.rules)
+        merged.update(overrides)
+        return AxisRules(merged)
+
+    def mesh_axes_for(self, logical: str | None, mesh: Mesh) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        axes = self.rules.get(logical, ())
+        # Drop mesh axes that do not exist on this mesh (e.g. "pod" on the
+        # single-pod mesh).
+        return tuple(a for a in axes if a in mesh.shape)
+
+    def spec_for(
+        self,
+        logical_axes: Sequence[str | None],
+        dims: Sequence[int],
+        mesh: Mesh,
+    ) -> P:
+        """PartitionSpec for an array with the given logical axes & shape.
+
+        Applies the divisibility guard per-dimension: if the dim size is not
+        divisible by the product of the mapped mesh axes, the dim is
+        replicated instead.
+        """
+        assert len(logical_axes) == len(dims), (logical_axes, dims)
+        entries: list[Any] = []
+        used: set[str] = set()
+        for logical, dim in zip(logical_axes, dims):
+            axes = self.mesh_axes_for(logical, mesh)
+            axes = tuple(a for a in axes if a not in used)
+            if not axes:
+                entries.append(None)
+                continue
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            if size <= 1 or dim % size != 0:
+                # Try a prefix of the axes (e.g. shard on "pod" only).
+                ok: tuple[str, ...] = ()
+                for i in range(len(axes) - 1, 0, -1):
+                    sub = axes[:i]
+                    sz = int(np.prod([mesh.shape[a] for a in sub]))
+                    if sz > 1 and dim % sz == 0:
+                        ok = sub
+                        break
+                axes = ok
+            if not axes:
+                entries.append(None)
+            else:
+                used.update(axes)
+                entries.append(axes if len(axes) > 1 else axes[0])
+        return P(*entries)
+
+    def sharding_for(
+        self,
+        logical_axes: Sequence[str | None],
+        dims: Sequence[int],
+        mesh: Mesh,
+    ) -> NamedSharding:
+        return NamedSharding(mesh, self.spec_for(logical_axes, dims, mesh))
+
+
+def tree_pspecs(
+    abstract_tree: Any,
+    logical_tree: Any,
+    mesh: Mesh,
+    rules: AxisRules | None = None,
+) -> Any:
+    """Map a pytree of ShapeDtypeStructs + logical axes to PartitionSpecs."""
+    rules = rules or AxisRules()
+
+    def resolve(leaf: jax.ShapeDtypeStruct, axes: Sequence[str | None]) -> P:
+        return rules.spec_for(axes, leaf.shape, mesh)
+
+    return jax.tree.map(
+        resolve, abstract_tree, logical_tree,
+        is_leaf=lambda x: isinstance(x, (tuple, list)) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def tree_shardings(abstract_tree, logical_tree, mesh, rules=None):
+    rules = rules or AxisRules()
+    specs = tree_pspecs(abstract_tree, logical_tree, mesh, rules)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The data-parallel axes present on this mesh (pod composes with data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def data_parallelism(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in data_axes(mesh)]))
+
+
+def model_parallelism(mesh: Mesh) -> int:
+    return int(mesh.shape.get("model", 1))
+
+
+def local_mesh() -> Mesh:
+    """A mesh over whatever devices exist (tests / single host runs)."""
+    n = len(jax.devices())
+    return jax.make_mesh(
+        (1, n), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+    )

@@ -1,0 +1,105 @@
+"""Fault-tolerance utilities: heartbeat, preemption handling, retry loop.
+
+At 1000+ node scale, node loss and preemption are routine.  The posture:
+  * every process emits a heartbeat file an external watchdog can monitor;
+  * SIGTERM (preemption notice) triggers checkpoint-and-exit at the next
+    step boundary;
+  * transient step failures restore the last checkpoint and continue
+    (``resilient_loop``), re-forming the mesh if the device set changed
+    (elastic restore path in ``checkpoint.restore_checkpoint``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import signal
+import threading
+import time
+from typing import Callable
+
+
+class Heartbeat:
+    def __init__(self, path: str, interval: float = 10.0):
+        self.path = path
+        self.interval = interval
+        self._stop = threading.Event()
+        self._step = 0
+        self._thread: threading.Thread | None = None
+
+    def update(self, step: int):
+        self._step = step
+
+    def _run(self):
+        while not self._stop.wait(self.interval):
+            self._write()
+
+    def _write(self):
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"step": self._step, "time": time.time(),
+                       "pid": os.getpid()}, f)
+        os.replace(tmp, self.path)
+
+    def __enter__(self):
+        self._write()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        return self
+
+    def __exit__(self, *a):
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=1.0)
+        self._write()
+        return False
+
+
+class PreemptionGuard:
+    """Converts SIGTERM/SIGINT into a polled ``should_exit`` flag so the
+    train loop can checkpoint at a clean step boundary before exiting."""
+
+    def __init__(self, signals=(signal.SIGTERM,)):
+        self.should_exit = False
+        self._signals = signals
+        self._old = {}
+
+    def _handler(self, signum, frame):
+        self.should_exit = True
+
+    def __enter__(self):
+        for s in self._signals:
+            try:
+                self._old[s] = signal.signal(s, self._handler)
+            except ValueError:          # non-main thread (tests)
+                pass
+        return self
+
+    def __exit__(self, *a):
+        for s, h in self._old.items():
+            signal.signal(s, h)
+        return False
+
+
+def resilient_loop(step_fn: Callable[[int], None], start_step: int,
+                   end_step: int,
+                   on_failure: Callable[[BaseException], int],
+                   max_failures: int = 3):
+    """Run ``step_fn(step)`` for each step; on exception call
+    ``on_failure(exc) -> resume_step`` (restore from checkpoint) and
+    continue, up to ``max_failures`` consecutive failures."""
+    step = start_step
+    failures = 0
+    while step < end_step:
+        try:
+            step_fn(step)
+            step += 1
+            failures = 0
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except BaseException as e:      # noqa: BLE001 — deliberate catch-all
+            failures += 1
+            if failures > max_failures:
+                raise
+            step = on_failure(e)
+    return step

@@ -1,0 +1,306 @@
+"""RetrievalTrainer: the pjit training loop (paper §3.4, scaled out).
+
+Features:
+  * gradient accumulation (``lax.scan`` over microbatches inside the step)
+  * global-norm clipping, AdamW/Adafactor, LR schedule
+  * mesh-sharded state (FSDP/TP logical rules) with donated buffers
+  * atomic/async checkpointing + resume; elastic restore to a new mesh
+  * fault tolerance: resilient step loop, heartbeat, preemption guard
+  * optional explicit-DP mode (``dp_mode="shard_map"``) with compressed
+    gradient all-reduce (bf16 / int8 + error feedback)
+  * training-time IR metrics on a dev set (IRMetrics, paper §3.4)
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Any, Callable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core.config import RetrievalTrainingArguments
+from repro.core.metrics import IRMetrics
+from repro.sharding.partitioning import AxisRules, data_axes
+from repro.training import checkpoint as ckpt
+from repro.training import grad_compression as gc
+from repro.training.fault_tolerance import (Heartbeat, PreemptionGuard,
+                                            resilient_loop)
+from repro.training.optimizer import (OptimizerConfig, clip_by_global_norm,
+                                      make_optimizer)
+
+
+class RetrievalTrainer:
+    def __init__(self, retriever, args: RetrievalTrainingArguments,
+                 collator=None, train_dataset=None,
+                 loss_fn: Callable | None = None,
+                 dev_dataset=None,
+                 compute_metrics: IRMetrics | None = None,
+                 mesh=None, rules: AxisRules | None = None,
+                 batch_spec_fn: Callable | None = None,
+                 dp_mode: str = "pjit"):
+        self.retriever = retriever
+        self.args = args
+        self.collator = collator
+        self.train_dataset = train_dataset
+        self.dev_dataset = dev_dataset
+        self.compute_metrics = compute_metrics
+        self.mesh = mesh
+        self.rules = rules or (retriever.encoder.axis_rules()
+                               if retriever is not None and
+                               hasattr(retriever, "encoder") else AxisRules())
+        self.dp_mode = dp_mode
+        if retriever is not None:
+            retriever.aux_loss_weight = args.aux_loss_weight
+        self._ctx = (mesh, self.rules) if mesh is not None else None
+        self.loss_fn = loss_fn or (
+            lambda p, b: retriever.forward(p, b, self._ctx))
+        self.opt_cfg = OptimizerConfig(
+            name=args.optimizer, learning_rate=args.learning_rate,
+            weight_decay=args.weight_decay, warmup_steps=args.warmup_steps,
+            total_steps=args.max_steps, grad_clip=args.grad_clip)
+        self.opt_init, self.opt_update = make_optimizer(self.opt_cfg)
+        self.ckpt_mgr = ckpt.CheckpointManager(
+            os.path.join(args.output_dir, "checkpoints"),
+            save_every=args.checkpoint_every, keep=args.keep_checkpoints,
+            async_save=args.async_checkpoint)
+        self._step_jit = None
+        self.logs: list[dict] = []
+
+    # -- state -------------------------------------------------------------
+    def init_state(self, rng=None) -> dict:
+        rng = jax.random.key(self.args.seed) if rng is None else rng
+        params = self.retriever.init_params(rng)
+        # rng stored as raw key data (uint32) so it checkpoints as numpy
+        state = {"step": jnp.zeros((), jnp.int32), "params": params,
+                 "opt": self.opt_init(params),
+                 "rng": jax.random.key_data(
+                     jax.random.key(self.args.seed + 1))}
+        if self.args.grad_compression == "int8":
+            state["ef"] = gc.init_error_feedback(params)
+        if self.mesh is not None:
+            state = jax.device_put(state, self.state_shardings(state))
+        return state
+
+    def state_shardings(self, state) -> Any:
+        """NamedShardings for the train state under the logical rules.
+
+        Optimizer state mirrors parameter sharding (ZeRO-3); adafactor's
+        factored vr/vc drop the corresponding spec dims.
+        """
+        if self.mesh is None:
+            return None
+        p_axes = self.retriever.param_logical_axes()
+
+        def pspec(leaf, axes):
+            return self.rules.spec_for(axes, leaf.shape, self.mesh)
+
+        param_specs = jax.tree.map(
+            pspec, state["params"], p_axes,
+            is_leaf=lambda x: hasattr(x, "shape"))
+        rep = P()
+        opt = state["opt"]
+        if "mu" in opt:                       # adamw
+            opt_specs = {"mu": param_specs, "nu": param_specs}
+        else:                                 # adafactor
+            def fac(spec, v_dict):
+                spec_t = tuple(spec)
+                out = {}
+                for k in v_dict:
+                    if k == "v":
+                        out[k] = P(*spec_t)
+                    elif k == "vr":
+                        out[k] = P(*spec_t[:-1])
+                    else:                     # vc
+                        out[k] = P(*(spec_t[:-2] + spec_t[-1:]))
+                return out
+            opt_specs = {"v": jax.tree.map(
+                fac, param_specs, opt["v"],
+                is_leaf=lambda x: isinstance(x, dict) and (
+                    "v" in x or "vr" in x))}
+        specs = {"step": rep, "params": param_specs, "opt": opt_specs,
+                 "rng": rep}
+        if "ef" in state:
+            specs["ef"] = param_specs
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), specs,
+            is_leaf=lambda x: isinstance(x, P))
+
+    def batch_sharding(self):
+        """Batch arrays sharded over the data axes on dim 0."""
+        if self.mesh is None:
+            return None
+        axes = data_axes(self.mesh)
+        return NamedSharding(self.mesh, P(axes if axes else None))
+
+    # -- train step ----------------------------------------------------------
+    def _build_step(self, example_batch):
+        accum = self.args.grad_accum_steps
+
+        def loss_and_metrics(params, batch):
+            out = self.loss_fn(params, batch)
+            if isinstance(out, tuple):
+                return out[0], out[1]
+            return out, {}
+
+        def grads_of(params, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_and_metrics, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def step_fn(state, batch):
+            params = state["params"]
+            if accum > 1:
+                def micro(carry, mb):
+                    loss, metrics, grads = grads_of(params, mb)
+                    acc_g, acc_l = carry
+                    acc_g = jax.tree.map(jnp.add, acc_g, grads)
+                    return (acc_g, acc_l + loss), metrics
+                zero = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, loss_sum), metrics = jax.lax.scan(
+                    micro, (zero, jnp.float32(0.0)), batch)
+                grads = jax.tree.map(lambda g: g / accum, grads)
+                loss = loss_sum / accum
+                metrics = jax.tree.map(lambda m: m[-1], metrics)
+            else:
+                loss, metrics, grads = grads_of(params, batch)
+
+            if self.dp_mode == "shard_map" and self.mesh is not None:
+                grads, state = self._compressed_sync(grads, state)
+
+            grads, gnorm = clip_by_global_norm(grads, self.opt_cfg.grad_clip)
+            new_params, new_opt = self.opt_update(
+                grads, state["opt"], params, state["step"])
+            new_rng = jax.random.key_data(jax.random.fold_in(
+                jax.random.wrap_key_data(state["rng"]), 0))
+            new_state = dict(state)
+            new_state.update(step=state["step"] + 1, params=new_params,
+                             opt=new_opt, rng=new_rng)
+            metrics = dict(metrics)
+            metrics.update(loss=loss, grad_norm=gnorm)
+            return new_state, metrics
+
+        return jax.jit(step_fn, donate_argnums=0)
+
+    def _compressed_sync(self, grads, state):
+        """Explicit-DP gradient sync with compression (inside shard_map
+        this would psum; under single-device tests it is the identity +
+        error-feedback bookkeeping)."""
+        method = self.args.grad_compression
+        if method == "none":
+            return grads, state
+        if method == "bf16":
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+            return grads, state
+        if method == "int8":
+            new_state = dict(state)
+
+            def one(g, e):
+                g = g.astype(jnp.float32) + e
+                q, scale = gc.quantize_int8(g)
+                deq = gc.dequantize_int8(q, scale)
+                return deq, g - deq
+            flat_g, tdef = jax.tree.flatten(grads)
+            flat_e = jax.tree.leaves(state["ef"])
+            pairs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+            new_state["ef"] = jax.tree.unflatten(
+                tdef, [p[1] for p in pairs])
+            return jax.tree.unflatten(tdef, [p[0] for p in pairs]), new_state
+        raise ValueError(method)
+
+    # -- data ------------------------------------------------------------------
+    def _batches(self, rng: np.random.Generator) -> Iterator[dict]:
+        n = len(self.train_dataset)
+        bsz = self.args.per_device_batch_size * max(
+            1, len(jax.devices()) if self.mesh is not None else 1)
+        accum = self.args.grad_accum_steps
+        while True:
+            idx = rng.integers(0, n, size=bsz * accum)
+            feats = [self.train_dataset[int(i)] for i in idx]
+            batch = self.collator(feats)
+            if accum > 1:
+                batch = jax.tree.map(
+                    lambda x: np.reshape(
+                        x, (accum, x.shape[0] // accum) + x.shape[1:]),
+                    batch)
+            yield batch
+
+    # -- main loop ---------------------------------------------------------------
+    def train(self, state: dict | None = None,
+              inject_failure_at: int | None = None) -> dict:
+        args = self.args
+        os.makedirs(args.output_dir, exist_ok=True)
+        if state is None:
+            state = self.init_state()
+        restored, rstep = self.ckpt_mgr.restore_latest(
+            jax.tree.map(np.asarray, state),
+            self.state_shardings(state))
+        if restored is not None:
+            state = restored
+        if self._step_jit is None:
+            self._step_jit = self._build_step(None)
+
+        rng = np.random.default_rng(args.seed)
+        batches = self._batches(rng)
+        box = {"state": state}
+        t_start = time.monotonic()
+
+        def do_step(step: int):
+            batch = next(batches)
+            if inject_failure_at is not None and step == inject_failure_at:
+                raise RuntimeError(f"injected failure at step {step}")
+            box["state"], metrics = self._step_jit(box["state"], batch)
+            if step % args.log_every == 0 or step == args.max_steps - 1:
+                rec = {k: float(v) for k, v in metrics.items()}
+                rec.update(step=step,
+                           wall=time.monotonic() - t_start)
+                if self.dev_dataset is not None and self.compute_metrics:
+                    rec.update(self._dev_metrics(box["state"]["params"]))
+                self.logs.append(rec)
+            if self.ckpt_mgr.should_save(step):
+                self.ckpt_mgr.save(step, box["state"])
+            hb.update(step)
+            if guard.should_exit:
+                self.ckpt_mgr.save(step, box["state"], blocking=True)
+                raise SystemExit(0)
+
+        def on_failure(exc):
+            restored, rstep = self.ckpt_mgr.restore_latest(
+                jax.tree.map(np.asarray, box["state"]),
+                self.state_shardings(box["state"]))
+            if restored is None:
+                box["state"] = self.init_state()
+                return 0
+            box["state"] = restored
+            return rstep + 1
+
+        start = int(jax.device_get(state["step"]))
+        with Heartbeat(os.path.join(args.output_dir, "heartbeat.json")) \
+                as hb, PreemptionGuard() as guard:
+            resilient_loop(do_step, start, args.max_steps, on_failure)
+        self.ckpt_mgr.save(args.max_steps, box["state"], blocking=True)
+        self.ckpt_mgr.wait()
+        return box["state"]
+
+    # -- training-time IR metrics (paper §3.4) -------------------------------------
+    def _dev_metrics(self, params) -> dict:
+        groups = self.dev_dataset
+        feats = groups if isinstance(groups, list) else groups.dev_groups(32)
+        batch = self.collator(feats)
+        q = self.retriever.encode_query(params, batch["query"], self._ctx)
+        p = self.retriever.encode_passage(params, batch["passage"],
+                                          self._ctx)
+        nq = q.shape[0]
+        p = p.reshape(nq, -1, p.shape[-1])
+        scores = np.asarray(jnp.einsum("qd,qgd->qg", q, p))
+        labels = batch.get("labels")
+        if labels is None:
+            labels = np.zeros(scores.shape, np.float32)
+            labels[:, 0] = 1.0
+        return self.compute_metrics(scores, np.asarray(labels))

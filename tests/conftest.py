@@ -1,0 +1,48 @@
+import os
+import sys
+
+# tests run on the single real CPU device — dry-run meshes are exercised
+# in subprocesses with their own XLA_FLAGS (see test_dryrun_mini.py)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_retrieval_dataset
+
+
+@pytest.fixture(scope="session")
+def tiny_lm_cfg():
+    from repro.models.transformer import LMConfig
+    return LMConfig(name="tiny", n_layers=2, d_model=32, n_heads=4,
+                    n_kv_heads=2, head_dim=8, d_ff=64, vocab_size=257,
+                    dtype=jnp.float32, pooling="mean", remat=False)
+
+
+@pytest.fixture(scope="session")
+def tiny_retriever(tiny_lm_cfg):
+    from repro.core.config import ModelArguments
+    from repro.models.retriever import BiEncoderRetriever
+    return BiEncoderRetriever.from_model_args(
+        ModelArguments(temperature=0.05), tiny_lm_cfg)
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_retriever):
+    return tiny_retriever.init_params(jax.random.key(0))
+
+
+@pytest.fixture(scope="session")
+def retrieval_data(tmp_path_factory):
+    root = tmp_path_factory.mktemp("data")
+    queries, corpus, qrels = make_retrieval_dataset(
+        str(root), n_queries=24, n_docs=96, n_topics=8)
+    return {"dir": str(root), "queries": queries, "corpus": corpus,
+            "qrels": qrels}
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,27 @@
+from repro.core.config import (DataArguments, ModelArguments,
+                               RetrievalTrainingArguments, parse_cli)
+
+
+def test_parse_cli_multiple_dataclasses():
+    train, model, data = parse_cli(
+        RetrievalTrainingArguments, ModelArguments, DataArguments,
+        argv=["--learning_rate", "5e-4", "--loss=ws",
+              "--group_size", "4", "--max_steps", "77",
+              "--async_checkpoint", "false"])
+    assert train.learning_rate == 5e-4
+    assert train.max_steps == 77
+    assert train.async_checkpoint is False
+    assert model.loss == "ws"
+    assert data.group_size == 4
+
+
+def test_parse_cli_defaults_untouched():
+    model = parse_cli(ModelArguments, argv=[])
+    assert model == ModelArguments()
+
+
+def test_parse_cli_tuple_field():
+    from repro.core.config import EvaluationArguments
+    ev = parse_cli(EvaluationArguments,
+                   argv=["--metrics", "ndcg@10,mrr@5"])
+    assert ev.metrics == ("ndcg@10", "mrr@5")

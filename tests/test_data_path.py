@@ -1,0 +1,125 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.collator import RetrievalCollator
+from repro.core.config import DataArguments
+from repro.core.embedding_cache import EmbeddingCache
+from repro.data.graph import CSRGraph, NeighborSampler, make_random_graph
+from repro.data.tokenizer import HashTokenizer
+
+
+# -- tokenizer ----------------------------------------------------------------
+
+def test_tokenizer_deterministic():
+    t1, t2 = HashTokenizer(1000), HashTokenizer(1000)
+    assert t1.encode("Hello World!") == t2.encode("hello world!")
+
+
+def test_tokenizer_bounds():
+    t = HashTokenizer(100)
+    ids = t.encode("some words " * 50, max_len=16)
+    assert len(ids) == 16
+    assert all(3 <= i < 100 for i in ids)
+
+
+def test_tokenizer_eos():
+    t = HashTokenizer(100)
+    assert t.encode("a b c", append_eos=True)[-1] == t.eos_id
+    assert t.encode("a b c d e", max_len=3, append_eos=True)[-1] == t.eos_id
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.text(min_size=0, max_size=80), st.integers(2, 16))
+def test_collator_shapes_property(text, max_len):
+    args = DataArguments(query_max_len=max_len, passage_max_len=max_len,
+                         vocab_size=128, pad_to_multiple=4)
+    coll = RetrievalCollator(args, HashTokenizer(128))
+    batch = coll([{"query": text, "passages": [text, "x"]}])
+    q = batch["query"]["tokens"]
+    # padded to a multiple unless capped by max_len
+    assert q.shape[0] == 1
+    assert q.shape[1] % 4 == 0 or q.shape[1] == max_len
+    assert q.shape[1] <= max_len
+    assert batch["passage"]["tokens"].shape[0] == 2
+    m = batch["query"]["mask"]
+    # mask is a prefix of ones
+    assert (np.cumsum(1 - m[0]) * m[0] == 0).all()
+
+
+def test_collator_labels_passthrough():
+    coll = RetrievalCollator(DataArguments(vocab_size=64), HashTokenizer(64))
+    batch = coll([{"query": "q", "passages": ["a", "b"],
+                   "labels": np.asarray([3.0, 1.0], np.float32)}])
+    assert batch["labels"].shape == (1, 2)
+
+
+# -- embedding cache -----------------------------------------------------------
+
+def test_cache_append_and_lazy_read(tmp_path, rng):
+    c = EmbeddingCache(str(tmp_path / "c"), dim=8)
+    v1 = rng.normal(size=(5, 8)).astype(np.float16)
+    c.cache_records([f"d{i}" for i in range(5)], v1)
+    v2 = rng.normal(size=(3, 8)).astype(np.float16)
+    c.cache_records([f"d{i}" for i in range(5, 8)], v2)
+    assert len(c) == 8
+    got = c.get(["d6", "d0"])
+    np.testing.assert_allclose(got[0], v2[1], rtol=1e-3)
+    np.testing.assert_allclose(got[1], v1[0], rtol=1e-3)
+    assert c.has(["d0", "nope"]).tolist() == [True, False]
+
+
+def test_cache_reopen(tmp_path, rng):
+    c = EmbeddingCache(str(tmp_path / "c"), dim=4)
+    v = rng.normal(size=(3, 4)).astype(np.float16)
+    c.cache_records(["a", "b", "c"], v)
+    c2 = EmbeddingCache(str(tmp_path / "c"), dim=4)   # reopen from disk
+    np.testing.assert_allclose(c2.get(["b"])[0], v[1], rtol=1e-3)
+
+
+def test_cache_missing_raises(tmp_path):
+    c = EmbeddingCache(str(tmp_path / "c"), dim=4)
+    with pytest.raises(KeyError):
+        c.get(["missing"])
+
+
+# -- neighbor sampler ------------------------------------------------------------
+
+def test_csr_from_edges():
+    src = np.asarray([0, 1, 2, 0], np.int32)
+    dst = np.asarray([1, 2, 0, 2], np.int32)
+    g = CSRGraph.from_edges(src, dst, 3)
+    assert sorted(g.neighbors(2).tolist()) == [0, 1]
+    assert g.degree(np.asarray([0, 1, 2])).tolist() == [1, 1, 2]
+
+
+def test_sampler_shapes_and_membership():
+    src, dst, comm = make_random_graph(200, 8, seed=1)
+    g = CSRGraph.from_edges(src, dst, 200)
+    s = NeighborSampler(g, (5, 3), seed=0)
+    l0, l1, l2 = s.sample(np.arange(10))
+    assert l0.shape == (10,) and l1.shape == (10, 5) and \
+        l2.shape == (10, 5, 3)
+    # sampled level-1 nodes are true neighbors (or self for isolated)
+    for i in range(10):
+        neigh = set(g.neighbors(i).tolist()) | {i}
+        assert set(l1[i].tolist()) <= neigh
+
+
+def test_sampler_isolated_self_loop():
+    g = CSRGraph.from_edges(np.asarray([0], np.int32),
+                            np.asarray([1], np.int32), 3)
+    s = NeighborSampler(g, (4,))
+    _, l1 = s.sample(np.asarray([2]))
+    assert (l1 == 2).all()      # node 2 has no in-edges -> self loop
+
+
+def test_sample_block_features(rng):
+    src, dst, _ = make_random_graph(50, 4, seed=2)
+    g = CSRGraph.from_edges(src, dst, 50)
+    x = rng.normal(size=(50, 6)).astype(np.float32)
+    s = NeighborSampler(g, (3, 2), seed=1)
+    f0, f1, f2 = s.sample_block(x, np.arange(4))
+    assert f0.shape == (4, 6) and f1.shape == (4, 3, 6) and \
+        f2.shape == (4, 3, 2, 6)

@@ -1,0 +1,129 @@
+import numpy as np
+import pytest
+
+from repro.core.collator import RetrievalCollator
+from repro.core.config import DataArguments, EvaluationArguments
+from repro.core.embedding_cache import EmbeddingCache
+from repro.core.evaluator import RetrievalEvaluator
+from repro.core.fair_sharding import FairSharder
+from repro.data.tokenizer import HashTokenizer
+
+
+@pytest.fixture()
+def evaluator(tiny_retriever, tiny_params):
+    coll = RetrievalCollator(DataArguments(vocab_size=257), HashTokenizer(257))
+    return RetrievalEvaluator(
+        EvaluationArguments(topk=10, metrics=("ndcg@10", "recall@10")),
+        tiny_retriever, coll, tiny_params)
+
+
+def test_search_returns_ranked(evaluator, retrieval_data):
+    qh, ids, scores = evaluator.search(retrieval_data["queries"],
+                                       retrieval_data["corpus"])
+    assert ids.shape == (len(retrieval_data["queries"]), 10)
+    assert (np.diff(scores, axis=1) <= 1e-6).all()      # descending
+
+
+def test_identity_retrieval(evaluator, retrieval_data):
+    """A doc used as its own query must rank itself first."""
+    corpus = retrieval_data["corpus"]
+    some = dict(list(corpus.items())[:5])
+    qh, ids, _ = evaluator.search(some, corpus, topk=3)
+    from repro.data.table import stable_id_hash
+    for qi, did in enumerate(some):
+        assert ids[qi, 0] == stable_id_hash(did)
+
+
+def test_multi_shard_merge_equals_single(tiny_retriever, tiny_params,
+                                         retrieval_data):
+    """2 simulated nodes with merged heaps == 1 node (Table 2 invariant)."""
+    coll = RetrievalCollator(DataArguments(vocab_size=257),
+                             HashTokenizer(257))
+    args = EvaluationArguments(topk=8, metrics=("ndcg@10",))
+    single = RetrievalEvaluator(args, tiny_retriever, coll, tiny_params)
+    qh1, ids1, s1 = single.search(retrieval_data["queries"],
+                                  retrieval_data["corpus"])
+
+    shards = {}
+
+    def merge_via_bus(heap):
+        # simulated transport: collect both processes' heaps, merge
+        shards[merge_via_bus.rank] = heap
+        if len(shards) < 2:
+            return heap
+        a, b = shards[0], shards[1]
+        a.merge(b)
+        return a
+
+    evs = []
+    for rank in range(2):
+        ev = RetrievalEvaluator(args, tiny_retriever, coll, tiny_params,
+                                process_index=rank, process_count=2,
+                                shard_merge_fn=merge_via_bus)
+        evs.append(ev)
+    merge_via_bus.rank = 0
+    evs[0].search(retrieval_data["queries"], retrieval_data["corpus"])
+    merge_via_bus.rank = 1
+    qh2, ids2, s2 = evs[1].search(retrieval_data["queries"],
+                                  retrieval_data["corpus"])
+    np.testing.assert_allclose(s1, s2, rtol=1e-5)
+    np.testing.assert_array_equal(ids1, ids2)
+
+
+def test_mining_excludes_positives(evaluator, retrieval_data):
+    negs = evaluator.mine_hard_negatives(
+        retrieval_data["queries"], retrieval_data["corpus"],
+        retrieval_data["qrels"], depth=8)
+    for q, d, s in negs:
+        assert d not in {k for k, v in retrieval_data["qrels"][q].items()
+                         if v > 0}
+
+
+def test_cache_roundtrip_consistency(evaluator, retrieval_data, tmp_path):
+    cache = EmbeddingCache(str(tmp_path / "c"), dim=32)
+    m1 = evaluator.evaluate(retrieval_data["queries"],
+                            retrieval_data["corpus"],
+                            retrieval_data["qrels"], cache=cache)
+    assert len(cache) == len(retrieval_data["corpus"])
+    m2 = evaluator.evaluate(retrieval_data["queries"],
+                            retrieval_data["corpus"],
+                            retrieval_data["qrels"], cache=cache)
+    for k in m1:
+        assert abs(m1[k] - m2[k]) < 1e-6
+
+
+def test_heap_impls_agree_end_to_end(tiny_retriever, tiny_params,
+                                     retrieval_data):
+    coll = RetrievalCollator(DataArguments(vocab_size=257),
+                             HashTokenizer(257))
+    results = {}
+    for impl in ("jax", "python", "pallas"):
+        ev = RetrievalEvaluator(
+            EvaluationArguments(topk=5, heap_impl=impl,
+                                metrics=("ndcg@10",)),
+            tiny_retriever, coll, tiny_params)
+        _, ids, _ = ev.search(retrieval_data["queries"],
+                              retrieval_data["corpus"])
+        results[impl] = ids
+    np.testing.assert_array_equal(results["jax"], results["python"])
+    np.testing.assert_array_equal(results["jax"], results["pallas"])
+
+
+# -- fair sharding -----------------------------------------------------------------
+
+def test_fair_sharder_proportional():
+    s = FairSharder(3, alpha=1.0)
+    s.update(0, 100, 1.0)    # 100 it/s
+    s.update(1, 300, 1.0)    # 300 it/s
+    s.update(2, 100, 1.0)
+    shares = s.shares(500)
+    assert sum(shares) == 500
+    assert shares[1] > shares[0] * 2      # 3x faster worker gets ~3x work
+
+
+def test_fair_sharder_bounds_cover():
+    s = FairSharder(4)
+    bounds = s.bounds(103)
+    assert bounds[0][0] == 0 and bounds[-1][1] == 103
+    for (a0, a1), (b0, b1) in zip(bounds, bounds[1:]):
+        assert a1 == b0

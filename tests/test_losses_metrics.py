@@ -1,0 +1,106 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metrics import IRMetrics, compute_metrics
+from repro.models.losses import (LOSS_REGISTRY, BCELoss, InfoNCELoss,
+                                 KLDivergenceLoss, ListNetLoss,
+                                 RetrievalLoss, WassersteinLoss, get_loss)
+
+
+def test_registry_aliases():
+    for alias in ("infonce", "kl", "ws", "listnet", "bce"):
+        assert alias in LOSS_REGISTRY
+        assert isinstance(get_loss(alias), RetrievalLoss)
+
+
+def test_custom_loss_autoregisters():
+    class MyLoss(RetrievalLoss):
+        _alias = "my_test_loss"
+
+        def __call__(self, scores, labels):
+            return jnp.float32(0.0)
+
+    assert isinstance(get_loss("my_test_loss"), MyLoss)
+
+
+def test_infonce_perfect_scores():
+    scores = jnp.eye(4) * 100.0
+    labels = jnp.arange(4)
+    assert float(InfoNCELoss()(scores, labels)) < 1e-3
+    # uniform scores -> log(P)
+    uniform = jnp.zeros((4, 4))
+    np.testing.assert_allclose(
+        float(InfoNCELoss()(uniform, labels)), np.log(4), rtol=1e-5)
+
+
+def test_kl_zero_when_matched():
+    labels = jnp.asarray([[3.0, 1.0, 0.0, -1.0]])
+    tgt = np.asarray([3, 1, 0, 0], np.float64)
+    tgt = tgt / tgt.sum()
+    # scores = log target (masked) gives ~0 KL
+    scores = jnp.asarray([[np.log(tgt[0]), np.log(tgt[1]), -30.0, 0.0]])
+    val = float(KLDivergenceLoss()(scores, labels))
+    assert val < 0.02
+
+
+def test_wasserstein_orders():
+    labels = jnp.asarray([[3.0, 2.0, 1.0, 0.0]])
+    good = jnp.asarray([[9.0, 6.0, 3.0, 0.0]])
+    bad = jnp.asarray([[0.0, 3.0, 6.0, 9.0]])
+    assert float(WassersteinLoss()(good, labels)) < float(
+        WassersteinLoss()(bad, labels))
+
+
+def test_losses_differentiable():
+    labels = jnp.asarray([[3.0, 2.0, 0.0, -1.0], [1.0, 0.0, 2.0, -1.0]])
+    scores = jnp.asarray(np.random.default_rng(0).normal(size=(2, 4)),
+                         jnp.float32)
+    for loss in (KLDivergenceLoss(), WassersteinLoss(), ListNetLoss()):
+        g = jax.grad(lambda s: loss(s, labels))(scores)
+        assert np.isfinite(np.asarray(g)).all()
+    g = jax.grad(lambda s: BCELoss()(s[:, 0], jnp.asarray([1.0, 0.0])))(
+        scores)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+# -- metrics -----------------------------------------------------------------
+
+def test_compute_metrics_hand_example():
+    # 1 query, relevant docs {1: grade 2, 3: grade 1}; run = [3, 2, 1]
+    run = np.asarray([[3, 2, 1]])
+    qrels = {0: {1: 2.0, 3: 1.0}}
+    m = compute_metrics(("ndcg@3", "mrr@3", "recall@3", "map@3"),
+                        run, np.asarray([0]), qrels)
+    # rels of run = [1, 0, 2] -> dcg = 1/log2(2) + 3/log2(4) = 1 + 1.5
+    dcg = 1.0 + 3.0 / 2.0
+    idcg = 3.0 + 1.0 / np.log2(3)
+    np.testing.assert_allclose(m["ndcg@3"], dcg / idcg, rtol=1e-6)
+    np.testing.assert_allclose(m["mrr@3"], 1.0, rtol=1e-6)    # rank 1 hit
+    np.testing.assert_allclose(m["recall@3"], 1.0, rtol=1e-6)
+    np.testing.assert_allclose(m["map@3"], (1 / 1 + 2 / 3) / 2, rtol=1e-6)
+
+
+def test_metrics_bounds(rng):
+    run = rng.integers(0, 50, size=(10, 10)).astype(np.int64)
+    qrels = {q: {int(d): 1.0 for d in rng.integers(0, 50, 3)}
+             for q in range(10)}
+    m = compute_metrics(("ndcg@10", "mrr@10", "recall@10"), run,
+                        np.arange(10), qrels)
+    for v in m.values():
+        assert 0.0 <= v <= 1.0
+
+
+def test_irmetrics_rerank():
+    scores = np.asarray([[0.9, 0.1, 0.5], [0.2, 0.8, 0.1]])
+    labels = np.asarray([[2.0, 0.0, 1.0], [0.0, 3.0, -1.0]])
+    m = IRMetrics(("ndcg@3", "mrr@3"))(scores, labels)
+    # both queries rank their best doc first -> perfect
+    np.testing.assert_allclose(m["ndcg@3"], 1.0, rtol=1e-6)
+    np.testing.assert_allclose(m["mrr@3"], 1.0, rtol=1e-6)
+    # padding (-1) is excluded from the ranking entirely: the real
+    # relevant doc ranks first even though the pad slot scored higher
+    m2 = IRMetrics(("mrr@3",))(np.asarray([[1.0, 0.5]]),
+                               np.asarray([[-1.0, 1.0]]))
+    np.testing.assert_allclose(m2["mrr@3"], 1.0)

@@ -1,0 +1,130 @@
+import numpy as np
+
+from repro.core.config import DataArguments, MaterializedQRelConfig
+from repro.core.datasets import BinaryDataset, MultiLevelDataset
+from repro.core.materialized_qrel import MaterializedQRel
+from repro.data.table import stable_id_hash
+
+
+def _cfg(data, **kw):
+    d = data["dir"]
+    return MaterializedQRelConfig(
+        qrel_path=f"{d}/qrels/train.tsv", query_path=f"{d}/queries.jsonl",
+        corpus_path=f"{d}/corpus.jsonl", **kw)
+
+
+def _naive_groups(data, min_score=None, max_score=None, new_label=None):
+    """Reference implementation: load everything, group in dicts."""
+    groups = {}
+    for line in open(f"{data['dir']}/qrels/train.tsv"):
+        q, doc, s = line.split("\t")
+        s = float(s)
+        if min_score is not None and s < min_score:
+            continue
+        if max_score is not None and s > max_score:
+            continue
+        if new_label is not None:
+            s = new_label
+        groups.setdefault(q, {})[doc] = s
+    return groups
+
+
+def test_groups_match_naive(retrieval_data, tmp_path):
+    m = MaterializedQRel(_cfg(retrieval_data), str(tmp_path))
+    naive = _naive_groups(retrieval_data)
+    assert len(m) == len(naive)
+    for q, docs in naive.items():
+        dids, scores = m.group(stable_id_hash(q))
+        assert {int(d) for d in dids} == {stable_id_hash(d) for d in docs}
+
+
+def test_min_score_filter(retrieval_data, tmp_path):
+    m = MaterializedQRel(_cfg(retrieval_data, min_score=2), str(tmp_path))
+    naive = _naive_groups(retrieval_data, min_score=2)
+    qids = {q for q, docs in naive.items() if docs}
+    assert len(m) == len(qids)
+    for q in qids:
+        _, scores = m.group(stable_id_hash(q))
+        assert (scores >= 2).all()
+
+
+def test_relabel(retrieval_data, tmp_path):
+    m = MaterializedQRel(_cfg(retrieval_data, min_score=1, new_label=3),
+                         str(tmp_path))
+    for q in list(retrieval_data["qrels"])[:5]:
+        _, scores = m.group(stable_id_hash(q))
+        assert (scores == 3).all()
+
+
+def test_transform_fn(retrieval_data, tmp_path):
+    m = MaterializedQRel(
+        _cfg(retrieval_data, transform_fn=lambda s: s * 10), str(tmp_path))
+    q = list(retrieval_data["qrels"])[0]
+    _, scores = m.group(stable_id_hash(q))
+    assert set(np.unique(scores)).issubset({10.0, 20.0, 30.0})
+
+
+def test_filter_fn(retrieval_data, tmp_path):
+    m = MaterializedQRel(
+        _cfg(retrieval_data, filter_fn=lambda q, d, s: s >= 1),
+        str(tmp_path))
+    naive = _naive_groups(retrieval_data, min_score=1)
+    assert len(m) == len([q for q, d in naive.items() if d])
+
+
+def test_group_random_k_deterministic(retrieval_data, tmp_path):
+    m = MaterializedQRel(_cfg(retrieval_data, group_random_k=2),
+                         str(tmp_path))
+    q = stable_id_hash(list(retrieval_data["qrels"])[0])
+    d1, _ = m.group(q)
+    d2, _ = m.group(q)
+    assert len(d1) <= 2
+    np.testing.assert_array_equal(d1, d2)   # seeded => stable
+
+
+def test_lazy_text_access(retrieval_data, tmp_path):
+    m = MaterializedQRel(_cfg(retrieval_data), str(tmp_path))
+    q = list(retrieval_data["queries"])[0]
+    assert m.query_text(stable_id_hash(q)) == retrieval_data["queries"][q]
+    d = list(retrieval_data["corpus"])[0]
+    assert retrieval_data["corpus"][d] in m.doc_text(stable_id_hash(d))
+
+
+def test_binary_dataset_structure(retrieval_data, tmp_path):
+    pos = _cfg(retrieval_data, min_score=1)
+    neg = _cfg(retrieval_data, group_random_k=1)
+    args = DataArguments(group_size=3)
+    ds = BinaryDataset(args, str.upper, lambda t: t, pos, neg,
+                       str(tmp_path))
+    item = ds[0]
+    assert item["query"].isupper()
+    assert len(item["passages"]) == 3
+    # first passage is a known positive for this query
+    qrels = retrieval_data["qrels"]
+
+
+def test_multilevel_dedup_and_padding(retrieval_data, tmp_path):
+    src = _cfg(retrieval_data)
+    relabeled = _cfg(retrieval_data, min_score=1, new_label=3)
+    ds = MultiLevelDataset(DataArguments(group_size=8), lambda t: t,
+                           lambda t: t, [src, relabeled], str(tmp_path))
+    item = ds[0]
+    assert len(item["passages"]) == 8
+    labels = item["labels"]
+    assert labels.shape == (8,)
+    # dedup keeps max label: relabeled-to-3 should win
+    assert labels[0] == 3
+    # padding labels are -1
+    assert (labels >= -1).all()
+    # labels sorted descending (before padding)
+    valid = labels[labels >= 0]
+    assert (np.diff(valid) <= 0).all()
+
+
+def test_combined_sources_union(retrieval_data, tmp_path):
+    a = _cfg(retrieval_data, max_score=1)
+    b = _cfg(retrieval_data, min_score=2)
+    m_all = MaterializedQRel(_cfg(retrieval_data), str(tmp_path))
+    ds = MultiLevelDataset(DataArguments(group_size=4), lambda t: t,
+                           lambda t: t, [a, b], str(tmp_path))
+    assert len(ds) == len(m_all)

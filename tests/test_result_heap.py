@@ -1,0 +1,75 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.result_heap import FastResultHeapq
+
+
+def _stream(rng, q, chunks, c):
+    for i in range(chunks):
+        yield (rng.normal(size=(q, c)).astype(np.float32),
+               np.arange(i * c, (i + 1) * c, dtype=np.int32))
+
+
+@pytest.mark.parametrize("impl", ["jax", "pallas"])
+def test_impls_match_python_heapq(impl, rng):
+    q, k, c = 7, 5, 33
+    ref = FastResultHeapq(q, k, impl="python")
+    fast = FastResultHeapq(q, k, impl=impl)
+    for scores, ids in _stream(rng, q, 4, c):
+        ref.update(scores, ids)
+        fast.update(scores, ids)
+    rv, ri = ref.finalize()
+    fv, fi = fast.finalize()
+    np.testing.assert_allclose(rv, fv, rtol=1e-6)
+    np.testing.assert_array_equal(ri, fi)
+
+
+def test_merge_equals_single_stream(rng):
+    """Sharded (merge) result == unsharded result (multi-node invariant)."""
+    q, k, c = 5, 8, 16
+    whole = FastResultHeapq(q, k)
+    parts = [FastResultHeapq(q, k) for _ in range(3)]
+    for i, (scores, ids) in enumerate(_stream(rng, q, 6, c)):
+        whole.update(scores, ids)
+        parts[i % 3].update(scores, ids)
+    merged = parts[0]
+    merged.merge(parts[1])
+    merged.merge(parts[2])
+    wv, wi = whole.finalize()
+    mv, mi = merged.finalize()
+    np.testing.assert_allclose(wv, mv, rtol=1e-6)
+    np.testing.assert_array_equal(wi, mi)
+
+
+def test_fewer_candidates_than_k(rng):
+    h = FastResultHeapq(3, 10)
+    h.update(rng.normal(size=(3, 4)).astype(np.float32),
+             np.arange(4, dtype=np.int32))
+    vals, ids = h.finalize()
+    assert (ids[:, 4:] == -1).all()
+    assert np.isneginf(vals[:, 4:]).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(q=st.integers(1, 6), k=st.integers(1, 12),
+       n_chunks=st.integers(1, 4), c=st.integers(1, 40),
+       seed=st.integers(0, 999))
+def test_property_topk_of_concat(q, k, n_chunks, c, seed):
+    """Streaming top-k == top-k of the concatenated score matrix."""
+    rng = np.random.default_rng(seed)
+    h = FastResultHeapq(q, k)
+    all_scores = []
+    for scores, ids in _stream(rng, q, n_chunks, c):
+        h.update(scores, ids)
+        all_scores.append(scores)
+    full = np.concatenate(all_scores, axis=1)
+    vals, ids = h.finalize()
+    expect = -np.sort(-full, axis=1)[:, :k]
+    got = vals[:, : min(k, full.shape[1])]
+    np.testing.assert_allclose(got, expect[:, : got.shape[1]], rtol=1e-6)
+    # ids actually point at those scores
+    for qi in range(q):
+        for j in range(min(k, full.shape[1])):
+            assert full[qi, ids[qi, j]] == vals[qi, j]

@@ -1,0 +1,122 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.config import ModelArguments
+from repro.models.encoder import (ENCODER_REGISTRY, DefaultEncoder,
+                                  EncoderWithInstruction, PretrainedEncoder,
+                                  get_encoder)
+from repro.models.retriever import (RETRIEVER_REGISTRY, BiEncoderRetriever,
+                                    GradedBiEncoderRetriever)
+from repro.models.transformer import LMConfig
+
+
+def test_encoder_registry():
+    for alias in ("lm", "encoder_with_inst", "encoder_mean_pool", "gnn"):
+        assert alias in ENCODER_REGISTRY
+
+
+def test_custom_encoder_autoregisters(tiny_lm_cfg):
+    class MyEncoder(DefaultEncoder):
+        _alias = "my_test_encoder"
+
+        def format_query(self, text):
+            return "Q: " + text
+
+    enc = get_encoder("my_test_encoder", tiny_lm_cfg)
+    assert enc.format_query("hi") == "Q: hi"
+    # selectable via ModelArguments (paper: --encoder_class=...)
+    retr = BiEncoderRetriever.from_model_args(
+        ModelArguments(encoder_class="my_test_encoder"), tiny_lm_cfg)
+    assert retr.format_query("x") == "Q: x"
+
+
+def test_instruction_encoder_formats(tiny_lm_cfg):
+    enc = EncoderWithInstruction(tiny_lm_cfg)
+    assert enc.format_query("hello").startswith("Instruct:")
+    assert enc.format_passage("doc", "title") == "title doc"
+
+
+def test_user_provided_encoder_object(tiny_lm_cfg):
+    """Paper: arbitrary objects with the encoder duck-type work."""
+
+    class Bag(PretrainedEncoder):
+        def __init__(self, cfg):
+            self.cfg = cfg
+
+        def init_params(self, rng):
+            return {"emb": jax.random.normal(
+                rng, (self.cfg.vocab_size, 16))}
+
+        def abstract_params(self):
+            return {"emb": jax.ShapeDtypeStruct(
+                (self.cfg.vocab_size, 16), jnp.float32)}
+
+        def param_logical_axes(self):
+            return {"emb": (None, None)}
+
+        def encode(self, params, batch, ctx=None):
+            e = jnp.take(params["emb"], batch["tokens"], axis=0)
+            m = batch["mask"][..., None].astype(jnp.float32)
+            v = (e * m).sum(1) / jnp.clip(m.sum(1), 1e-6)
+            return v / jnp.clip(jnp.linalg.norm(v, axis=-1,
+                                                keepdims=True), 1e-9)
+
+    retr = BiEncoderRetriever.from_model_args(
+        ModelArguments(), tiny_lm_cfg, encoder=Bag(tiny_lm_cfg))
+    params = retr.init_params(jax.random.key(0))
+    batch = {
+        "query": {"tokens": jnp.ones((2, 4), jnp.int32),
+                  "mask": jnp.ones((2, 4), jnp.int32)},
+        "passage": {"tokens": jnp.ones((4, 4), jnp.int32),
+                    "mask": jnp.ones((4, 4), jnp.int32)},
+    }
+    loss, metrics = retr.forward(params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_biencoder_learns_alignment(tiny_retriever, tiny_params):
+    """Perfectly aligned embeddings give ~0 loss & accuracy 1."""
+    # identical query/passage tokens -> identical embeddings -> diagonal wins
+    toks = jax.random.randint(jax.random.key(0), (4, 6), 3, 257)
+    batch = {"query": {"tokens": toks, "mask": jnp.ones_like(toks)},
+             "passage": {"tokens": toks, "mask": jnp.ones_like(toks)}}
+    loss, metrics = tiny_retriever.forward(tiny_params, batch)
+    assert float(metrics["in_batch_accuracy"]) == 1.0
+
+
+def test_graded_retriever_group_scores(tiny_lm_cfg):
+    retr = GradedBiEncoderRetriever(DefaultEncoder(tiny_lm_cfg), "kl")
+    params = retr.init_params(jax.random.key(0))
+    b, g, s = 3, 4, 6
+    q = jax.random.randint(jax.random.key(1), (b, s), 3, 257)
+    p = jax.random.randint(jax.random.key(2), (b * g, s), 3, 257)
+    labels = jnp.asarray(np.random.default_rng(0).integers(
+        0, 4, (b, g)).astype(np.float32))
+    batch = {"query": {"tokens": q, "mask": jnp.ones_like(q)},
+             "passage": {"tokens": p, "mask": jnp.ones_like(p)},
+             "labels": labels}
+    loss, _ = retr.forward(params, batch)
+    assert np.isfinite(float(loss))
+
+
+def test_moe_encoder_aux_loss_flows():
+    cfg = LMConfig(name="moe", n_layers=2, d_model=32, n_heads=4,
+                   n_kv_heads=2, head_dim=8, d_ff=64, vocab_size=101,
+                   moe=True, n_experts=4, top_k=2, moe_d_ff=32,
+                   dtype=jnp.float32, remat=False)
+    retr = BiEncoderRetriever(DefaultEncoder(cfg), "infonce",
+                              aux_loss_weight=0.05)
+    params = retr.init_params(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (3, 6), 3, 101)
+    batch = {"query": {"tokens": toks, "mask": jnp.ones_like(toks)},
+             "passage": {"tokens": toks, "mask": jnp.ones_like(toks)}}
+    loss, metrics = retr.forward(params, batch)
+    assert "moe_aux_loss" in metrics
+    assert float(loss) > float(metrics["contrastive_loss"])
+
+
+def test_retriever_registry():
+    assert "biencoder" in RETRIEVER_REGISTRY
+    assert "graded_biencoder" in RETRIEVER_REGISTRY

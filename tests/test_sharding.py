@@ -1,0 +1,92 @@
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.roofline import collective_bytes
+from repro.sharding.partitioning import (AxisRules, data_axes,
+                                         data_parallelism)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # 1-device meshes still exercise the rule resolution logic
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+class FakeMesh:
+    """Shape-only mesh stand-in for rule resolution tests."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+def test_divisibility_guard():
+    rules = AxisRules()
+    mesh = FakeMesh(data=16, model=16)
+    # divisible -> sharded
+    assert rules.spec_for(("batch", None), (256, 4096), mesh) == \
+        P("data", None)
+    # not divisible -> replicated
+    assert rules.spec_for(("heads", None), (14, 64), mesh) == P(None, None)
+    # vocab not divisible by 16 (granite) -> replicated
+    assert rules.spec_for(("vocab", "embed"), (49155, 1536), mesh) == \
+        P(None, "model")
+
+
+def test_axis_used_once():
+    rules = AxisRules()
+    mesh = FakeMesh(data=16, model=16)
+    # experts takes "model"; expert_ffn then cannot reuse it
+    spec = rules.spec_for(("experts", "fsdp", "expert_ffn"),
+                          (128, 5120, 8192),
+                          mesh)
+    assert spec == P("model", None, None)
+    # experts NOT divisible -> expert_ffn gets model instead (granite)
+    spec = rules.spec_for(("experts", None, "expert_ffn"), (40, 1536, 512),
+                          mesh)
+    assert spec == P(None, None, "model")
+
+
+def test_pod_prefix_fallback():
+    rules = AxisRules().with_overrides(fsdp=("pod", "data"))
+    mesh = FakeMesh(pod=2, data=16, model=16)
+    # divisible by 2 but not 32 -> falls back to the "pod" prefix
+    assert rules.spec_for(("fsdp",), (34,), mesh) == P("pod")
+    assert rules.spec_for(("fsdp",), (64,), mesh) == P(("pod", "data"))
+
+
+def test_missing_mesh_axes_dropped():
+    rules = AxisRules()
+    mesh = FakeMesh(data=4, model=2)     # no "pod"
+    assert rules.spec_for(("batch",), (8,), mesh) == P("data")
+
+
+def test_data_axes_helpers():
+    assert data_axes(FakeMesh(pod=2, data=16, model=16)) == ("pod", "data")
+    assert data_parallelism(FakeMesh(data=16, model=16)) == 16
+
+
+# -- roofline HLO parsing ------------------------------------------------------
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[256,4096] parameter(0)
+  %add.3 = bf16[256,4096] add(p0, p0)
+  %ar = bf16[256,4096] all-reduce(add.3), replica_groups={}
+  %ag = f32[16,128] all-gather(p0), dimensions={0}
+  %tup = (bf16[8,8], bf16[8,8]) all-to-all(add.3, add.3)
+}
+"""
+
+
+def test_collective_bytes_symbol_table():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-reduce"] == 256 * 4096 * 2       # operand resolved
+    assert out["all-to-all"] == 2 * 256 * 4096 * 2   # two operands
+    assert out["all-gather"] == 256 * 4096 * 2       # p0 resolved
+    assert out["count"] == 3
+    assert out["total"] == out["all-reduce"] + out["all-gather"] + \
+        out["all-to-all"]

@@ -1,0 +1,76 @@
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.data.table import (MMapTable, atomic_write_dir, file_fingerprint,
+                              stable_id_hash)
+
+
+def _records(n):
+    return [{"_id": f"doc{i}", "text": f"text {i}"} for i in range(n)]
+
+
+def test_build_and_lookup(tmp_path):
+    t = MMapTable.build(_records(100), str(tmp_path / "t"))
+    assert len(t) == 100
+    assert t.get("doc42")["text"] == "text 42"
+    assert t.get(stable_id_hash("doc7"))["_id"] == "doc7"
+    assert "doc99" in t and "doc100" not in t
+    with pytest.raises(KeyError):
+        t.get("missing")
+
+
+def test_vectorized_indices(tmp_path):
+    t = MMapTable.build(_records(50), str(tmp_path / "t"))
+    hashes = np.asarray([stable_id_hash(f"doc{i}") for i in (3, 30, 7)])
+    idx = t.indices_of(hashes)
+    assert [t.row(i)["_id"] for i in idx] == ["doc3", "doc30", "doc7"]
+
+
+def test_duplicate_ids_rejected(tmp_path):
+    with pytest.raises(ValueError, match="collision|duplicate"):
+        MMapTable.build(_records(5) + [{"_id": "doc3", "text": "dup"}],
+                        str(tmp_path / "t"))
+
+
+def test_build_cached_reuses(tmp_path):
+    calls = []
+
+    def records():
+        calls.append(1)
+        return _records(10)
+
+    t1 = MMapTable.build_cached(records, str(tmp_path), "fp123")
+    t2 = MMapTable.build_cached(records, str(tmp_path), "fp123")
+    assert len(calls) == 1              # second call hit the cache
+    assert len(t1) == len(t2) == 10
+
+
+def test_atomic_write_failure_leaves_nothing(tmp_path):
+    target = str(tmp_path / "out")
+    with pytest.raises(RuntimeError):
+        with atomic_write_dir(target) as tmp:
+            with open(os.path.join(tmp, "partial"), "w") as f:
+                f.write("x")
+            raise RuntimeError("boom")
+    assert not os.path.exists(target)
+
+
+def test_fingerprint_changes_with_content(tmp_path):
+    p = tmp_path / "f.txt"
+    p.write_text("a")
+    fp1 = file_fingerprint(str(p))
+    os.utime(p, ns=(1, 2))
+    fp2 = file_fingerprint(str(p))
+    assert fp1 != fp2
+    assert file_fingerprint(str(p), "cfgA") != file_fingerprint(str(p), "cfgB")
+
+
+def test_memory_mapped_payload(tmp_path):
+    # a large-ish table's payload should not be resident after open
+    t = MMapTable.build(_records(5000), str(tmp_path / "t"))
+    assert isinstance(t._payload, np.memmap)
+    # row decode only touches its slice
+    assert t.row(4999)["_id"] == "doc4999"

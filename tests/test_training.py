@@ -1,0 +1,176 @@
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training import checkpoint as ckpt
+from repro.training import grad_compression as gc
+from repro.training.fault_tolerance import Heartbeat, resilient_loop
+from repro.training.optimizer import (OptimizerConfig, clip_by_global_norm,
+                                      make_optimizer, schedule)
+
+
+# -- optimizers ---------------------------------------------------------------
+
+def _quadratic_descends(opt_name, steps=60, lr=0.1):
+    cfg = OptimizerConfig(name=opt_name, learning_rate=lr, weight_decay=0.0)
+    init, update = make_optimizer(cfg)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5]),
+              "m": jnp.ones((4, 130)) * 2.0}    # matrix leaf (factored path)
+    state = init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["m"] ** 2)
+
+    l0 = float(loss(params))
+    for t in range(steps):
+        g = jax.grad(loss)(params)
+        params, state = update(g, state, params, jnp.asarray(t))
+    return l0, float(loss(params))
+
+
+@pytest.mark.parametrize("opt", ["adamw", "adafactor"])
+def test_optimizer_descends(opt):
+    l0, l1 = _quadratic_descends(opt)
+    assert l1 < l0 * 0.05, (opt, l0, l1)
+
+
+def test_grad_clip():
+    g = {"a": jnp.asarray([3.0, 4.0])}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 5.0, rtol=1e-6)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(clipped["a"])), 1.0, rtol=1e-5)
+
+
+def test_schedule_warmup_cosine():
+    cfg = OptimizerConfig(learning_rate=1.0, warmup_steps=10,
+                          total_steps=100)
+    assert float(schedule(cfg, jnp.asarray(0))) < 0.2
+    assert float(schedule(cfg, jnp.asarray(9))) > 0.9
+    assert float(schedule(cfg, jnp.asarray(99))) < 0.2
+
+
+# -- checkpointing -------------------------------------------------------------
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {"step": jnp.asarray(7, jnp.int32),
+            "params": {"w": jax.random.normal(k, (8, 8)),
+                       "b": jnp.zeros(8)},
+            "opt": {"mu": {"w": jnp.ones((8, 8)), "b": jnp.zeros(8)}}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = _state()
+    path = ckpt.save_checkpoint(str(tmp_path), 7, state)
+    restored = ckpt.restore_checkpoint(path, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+    assert ckpt.checkpoint_step(path) == 7
+
+
+def test_latest_checkpoint_ordering(tmp_path):
+    for step in (5, 20, 10):
+        ckpt.save_checkpoint(str(tmp_path), step, _state())
+    assert ckpt.latest_checkpoint(str(tmp_path)).endswith("step_00000020")
+
+
+def test_manager_gc_and_async(tmp_path):
+    mgr = ckpt.CheckpointManager(str(tmp_path), save_every=1, keep=2,
+                                 async_save=True)
+    for step in range(5):
+        mgr.save(step, _state())
+    mgr.wait()
+    dirs = sorted(os.listdir(tmp_path))
+    assert len(dirs) == 2 and dirs[-1] == "step_00000004"
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Restore under a different sharding (elastic scaling after node
+    loss): values must be identical regardless of topology."""
+    state = _state()
+    path = ckpt.save_checkpoint(str(tmp_path), 1, state)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    shardings = jax.tree.map(lambda _: sh, state)
+    restored = ckpt.restore_checkpoint(path, state, shardings)
+    np.testing.assert_allclose(np.asarray(restored["params"]["w"]),
+                               np.asarray(state["params"]["w"]))
+
+
+def test_corrupt_save_not_picked_up(tmp_path):
+    ckpt.save_checkpoint(str(tmp_path), 1, _state())
+    # a crashed mid-save leaves only a tmp dir / partial dir w/o manifest
+    os.makedirs(tmp_path / "step_00000002")
+    assert ckpt.latest_checkpoint(str(tmp_path)).endswith("step_00000001")
+
+
+# -- gradient compression --------------------------------------------------------
+
+def test_int8_quant_roundtrip_error(rng):
+    x = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32))
+    q, scale = gc.quantize_int8(x)
+    err = np.abs(np.asarray(gc.dequantize_int8(q, scale)) - np.asarray(x))
+    assert err.max() <= float(scale) / 2 + 1e-7
+
+
+def test_error_feedback_converges():
+    """EF-int8 SGD reaches the optimum a plain-int8 SGD would circle."""
+    w = jnp.asarray([1.0, -1.0, 0.5])
+    target = jnp.asarray([0.3, 0.7, -0.2])
+    ef = jnp.zeros(3)
+    lr = 0.2
+    for _ in range(150):
+        g = w - target
+        g_ef = g + ef
+        q, s = gc.quantize_int8(g_ef)
+        deq = gc.dequantize_int8(q, s)
+        ef = g_ef - deq
+        w = w - lr * deq
+    np.testing.assert_allclose(np.asarray(w), np.asarray(target),
+                               atol=5e-3)
+
+
+def test_wire_bytes():
+    params = {"w": jnp.zeros((10, 10))}
+    assert gc.wire_bytes(params, "none") == 400
+    assert gc.wire_bytes(params, "bf16") == 200
+    assert gc.wire_bytes(params, "int8") == 100
+
+
+# -- fault tolerance ---------------------------------------------------------------
+
+def test_resilient_loop_restores():
+    calls = []
+
+    def step(i):
+        calls.append(i)
+        if i == 3 and calls.count(3) == 1:
+            raise RuntimeError("simulated node failure")
+
+    def on_failure(exc):
+        return 2        # "restored from checkpoint at step 2"
+
+    final = resilient_loop(step, 0, 6, on_failure, max_failures=2)
+    assert final == 6
+    assert calls.count(3) == 2     # re-executed after restore
+
+
+def test_resilient_loop_gives_up():
+    def step(i):
+        raise RuntimeError("hard failure")
+
+    with pytest.raises(RuntimeError):
+        resilient_loop(step, 0, 3, lambda e: 0, max_failures=2)
+
+
+def test_heartbeat_writes(tmp_path):
+    path = str(tmp_path / "hb.json")
+    with Heartbeat(path, interval=100) as hb:
+        hb.update(5)
+    import json
+    assert json.load(open(path))["step"] == 5
