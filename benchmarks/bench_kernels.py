@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
-from repro.kernels import ref
+from repro.kernels import ops, ref
 
 
 def run(q: int = 256, d: int = 512, n: int = 65_536, k: int = 100):
@@ -35,6 +35,19 @@ def run(q: int = 256, d: int = 512, n: int = 65_536, k: int = 100):
     emit("kernel_score_topk_fused_derived", us,
          f"hbm_bytes={fused_bytes / 1e6:.0f}MB "
          f"({unfused_bytes / fused_bytes:.1f}x less HBM traffic)")
+
+    # interpret-mode wall time on a reduced shape: validates the streaming
+    # (per-chunk id_offset, no recompile) path the evaluator drives; the
+    # number is NOT the TPU perf (Mosaic compiles the same kernel there)
+    sq, sn = qs[:32], ds[:4096]
+
+    def run_fused_interp():
+        jax.block_until_ready(
+            ops.fused_score_topk(sq, sn, k, id_offset=17))
+
+    fus = time_call(run_fused_interp, warmup=1, iters=2)
+    emit("kernel_score_topk_fused_interpret", fus,
+         f"q=32 n=4096 interpret-mode (CPU semantics check)")
     return {"reduction": unfused_bytes / fused_bytes}
 
 

@@ -1,0 +1,88 @@
+"""Search scoring backends: host-numpy baseline vs the device paths.
+
+Measures the scoring phase of ``RetrievalEvaluator.search`` (encoder
+factored out): streaming synthetic corpus-embedding chunks into a
+FastResultHeapq through each ``EvaluationArguments.score_impl`` backend.
+numpy and jax are timed *interleaved* (alternating iterations) so system
+drift on small shared machines hits both backends equally.
+
+Two regimes, matching where chunks come from in the real pipeline:
+  * cached — chunks arrive as host numpy arrays (the mmap'd
+    EmbeddingCache path); device backends pay the h2d embedding copy
+  * online — chunks arrive device-resident (encoder output); the numpy
+    baseline pays d2h(embs) + host GEMM + h2d(scores) per chunk
+
+``pallas_fused`` executes in interpret mode on CPU (semantics
+validation; its perf target is the TPU Mosaic path, where the (Q,N)
+score matrix never reaches HBM), so it is timed once on a reduced
+corpus and the headline device-vs-host ratio is reported for the
+``jax`` backend.
+"""
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.core.evaluator import SCORE_BACKENDS
+from repro.core.result_heap import FastResultHeapq
+
+
+def _search(backend, q_emb, chunks, chunk: int, q: int, k: int):
+    heap = FastResultHeapq(q, k, impl="jax")
+    for i, embs in enumerate(chunks):
+        backend(q_emb, embs, i * chunk, heap, k)
+    return heap.finalize()
+
+
+def run(q: int = 512, d: int = 128, n: int = 32_768, k: int = 100,
+        chunk: int = 4_096, iters: int = 6, include_fused: bool = True):
+    rng = np.random.default_rng(0)
+    q_np = rng.normal(size=(q, d)).astype(np.float32)
+    c_np = rng.normal(size=(n, d)).astype(np.float32)
+    q_dev = jnp.asarray(q_np)
+    chunks_np = [c_np[o: o + chunk] for o in range(0, n, chunk)]
+    chunks_dev = [jnp.asarray(c) for c in chunks_np]
+
+    # one-time sanity: the backends being compared return the same ranking
+    _, ids_np = _search(SCORE_BACKENDS["numpy"], q_np, chunks_np, chunk,
+                        q, k)
+    _, ids_jx = _search(SCORE_BACKENDS["jax"], q_dev, chunks_np, chunk,
+                        q, k)
+    np.testing.assert_array_equal(ids_np, ids_jx)
+
+    results = {}
+    shape = f"q={q} n={n} d={d} k={k} chunk={chunk}"
+    for regime, chunks in {"cached": chunks_np, "online": chunks_dev}.items():
+        _search(SCORE_BACKENDS["numpy"], q_np, chunks, chunk, q, k)
+        _search(SCORE_BACKENDS["jax"], q_dev, chunks, chunk, q, k)
+        t_np = t_jx = 0.0
+        for _ in range(iters):
+            t0 = time.monotonic()
+            _search(SCORE_BACKENDS["numpy"], q_np, chunks, chunk, q, k)
+            t_np += time.monotonic() - t0
+            t0 = time.monotonic()
+            _search(SCORE_BACKENDS["jax"], q_dev, chunks, chunk, q, k)
+            t_jx += time.monotonic() - t0
+        us_np = t_np / iters * 1e6
+        us_jx = t_jx / iters * 1e6
+        emit(f"search_backend_{regime}_numpy", us_np, shape)
+        emit(f"search_backend_{regime}_jax", us_jx, shape)
+        emit(f"search_backend_{regime}_jax_speedup", us_jx,
+             f"{us_np / us_jx:.2f}x vs host numpy")
+        results[regime] = us_np / us_jx
+
+    if include_fused:
+        # reduced corpus: interpret mode emulates the TPU kernel on CPU
+        small = chunks_dev[:2]
+        us = time_call(
+            lambda: _search(SCORE_BACKENDS["pallas_fused"], q_dev, small,
+                            chunk, q, k), warmup=1, iters=1)
+        emit("search_backend_pallas_fused_interpret", us,
+             f"q={q} n={2 * chunk} d={d} interpret-mode semantics check")
+    return results
+
+
+if __name__ == "__main__":
+    run()

@@ -65,6 +65,12 @@ class EvaluationArguments:
     fair_sharding: bool = True
     metrics: tuple[str, ...] = ("ndcg@10", "mrr@10", "recall@100")
     heap_impl: str = "jax"               # jax | pallas | python (baseline)
+    # Scoring backend for RetrievalEvaluator.search (all return identical
+    # rankings): "numpy" = host q@d.T baseline; "jax" = device-resident
+    # jit'd matmul; "pallas_fused" = fused score+top-k kernel — the (Q,N)
+    # score matrix never exists in HBM (interpret-mode on CPU, Mosaic on
+    # TPU).
+    score_impl: str = "jax"              # numpy | jax | pallas_fused
 
 
 def parse_cli(*arg_classes, argv: Sequence[str] | None = None):

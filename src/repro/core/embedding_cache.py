@@ -12,7 +12,7 @@ import os
 
 import numpy as np
 
-from repro.data.table import stable_id_hash
+from repro.data.table import stable_id_hash, stable_id_hash_array
 
 
 class EmbeddingCache:
@@ -52,7 +52,7 @@ class EmbeddingCache:
         """Append (ids, vectors).  ids: raw ids or int hashes."""
         vectors = np.ascontiguousarray(vectors, dtype=self.dtype)
         assert vectors.shape[1] == self.dim
-        hashes = np.asarray([stable_id_hash(i) for i in ids], np.int64)
+        hashes = stable_id_hash_array(ids)
         assert len(hashes) == len(vectors)
         with open(self._vec_path, "ab") as f:
             f.write(vectors.tobytes())
@@ -92,15 +92,13 @@ class EmbeddingCache:
     def has(self, ids) -> np.ndarray:
         if not len(self._ids):
             return np.zeros(len(ids), bool)
-        h = np.asarray([stable_id_hash(i) for i in ids], np.int64)
-        return self._rows_for(h) >= 0
+        return self._rows_for(stable_id_hash_array(ids)) >= 0
 
     def get(self, ids) -> np.ndarray:
         """Lazy fetch: only the requested rows are read from disk."""
         if not len(self._ids):
             raise KeyError(f"{len(ids)} ids not cached (cache empty)")
-        h = np.asarray([stable_id_hash(i) for i in ids], np.int64)
-        rows = self._rows_for(h)
+        rows = self._rows_for(stable_id_hash_array(ids))
         if (rows < 0).any():
             raise KeyError(f"{(rows < 0).sum()} ids not cached")
         return np.asarray(self._mmap[rows])

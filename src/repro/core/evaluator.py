@@ -6,6 +6,17 @@ One interface, three scales, zero code changes:
   * multi-node    — each process takes a fair-sharded corpus slice; local
     top-k states are merged (an O(Q*k) reduction, not O(Q*N))
 
+Scoring is a pluggable backend (``EvaluationArguments.score_impl``), all
+returning identical rankings:
+
+  * ``numpy``        — host ``q_emb @ embs.T`` (the paper-era baseline)
+  * ``jax``          — jit'd device matmul; query embeddings stay device-
+    resident and score chunks feed the heap without a host round-trip
+  * ``pallas_fused`` — ``kernels.ops.fused_score_topk`` reduces each
+    corpus chunk to (Q, k) *inside* the kernel, so the (Q, C) score
+    matrix never materializes on host or in HBM; per-chunk results merge
+    via ``FastResultHeapq.merge_arrays``
+
 Embedding caching: encoded chunks are written to the mmap'd
 EmbeddingCache; subsequent calls stream cached vectors (paper Table 3
 "w/ Cached Embs" path).
@@ -25,7 +36,56 @@ from repro.core.embedding_cache import EmbeddingCache
 from repro.core.fair_sharding import FairSharder
 from repro.core.metrics import compute_metrics
 from repro.core.result_heap import FastResultHeapq
-from repro.data.table import stable_id_hash
+from repro.data.table import stable_id_hash, stable_id_hash_array
+
+
+# -- score backends -----------------------------------------------------------
+#
+# A backend folds one corpus-embedding chunk into the running heap:
+#   backend(q_emb, chunk_embs, id_offset, heap, k)
+# where id_offset is the chunk's global corpus position (int32 positions
+# on device; the host maps positions back to 63-bit id hashes).
+
+_matmul_jit = jax.jit(lambda q, d: q @ d.T)
+
+
+def _score_numpy(q_emb, embs, id_offset: int, heap: FastResultHeapq,
+                 k: int) -> None:
+    positions = np.arange(id_offset, id_offset + embs.shape[0],
+                          dtype=np.int32)
+    heap.update(np.asarray(q_emb) @ np.asarray(embs).T, positions)
+
+
+def _score_jax(q_emb, embs, id_offset: int, heap: FastResultHeapq,
+               k: int) -> None:
+    scores = _matmul_jit(jnp.asarray(q_emb), jnp.asarray(embs))
+    positions = jnp.arange(id_offset, id_offset + embs.shape[0],
+                           dtype=jnp.int32)
+    heap.update(scores, positions)
+
+
+def _score_pallas_fused(q_emb, embs, id_offset: int, heap: FastResultHeapq,
+                        k: int) -> None:
+    from repro.kernels import ops as kops
+    vals, ids = kops.fused_score_topk(jnp.asarray(q_emb), jnp.asarray(embs),
+                                      k, id_offset=id_offset)
+    heap.merge_arrays(vals, ids)
+
+
+SCORE_BACKENDS: dict[str, Callable] = {
+    "numpy": _score_numpy,
+    "jax": _score_jax,
+    "pallas_fused": _score_pallas_fused,
+}
+
+
+def get_score_backend(name: str) -> Callable:
+    try:
+        return SCORE_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown score_impl {name!r}; expected one of "
+            f"{sorted(SCORE_BACKENDS)}") from None
 
 
 class RetrievalEvaluator:
@@ -47,10 +107,16 @@ class RetrievalEvaluator:
         self._shard_merge_fn = shard_merge_fn
         self._encode_jit = jax.jit(
             lambda p, b: self.retriever.encoder.encode(p, b))
+        # (corpus_obj, key list, int64 hash array): corpora are hashed
+        # once and reused across search/evaluate/mine_hard_negatives.
+        self._corpus_hash_cache: tuple[dict, list, np.ndarray] | None = None
 
     # -- encoding ------------------------------------------------------------
     def _encode_texts(self, texts: Sequence[str], is_query: bool,
-                      max_len: int | None = None) -> np.ndarray:
+                      max_len: int | None = None,
+                      device: bool = False):
+        """Encode texts; ``device=True`` keeps the result device-resident
+        (no per-chunk host round-trip) for the device score backends."""
         fmt = (self.retriever.format_query if is_query
                else self.retriever.format_passage)
         bs = (self.args.query_batch_size if is_query
@@ -59,12 +125,24 @@ class RetrievalEvaluator:
         for lo in range(0, len(texts), bs):
             chunk = [fmt(t) for t in texts[lo: lo + bs]]
             batch = self.collator.encode_texts(chunk, max_len)
-            out.append(np.asarray(self._encode_jit(self.params, batch)))
-        return np.concatenate(out) if out else np.empty((0, 0), np.float32)
+            enc = self._encode_jit(self.params, batch)
+            out.append(enc if device else np.asarray(enc))
+        if not out:
+            return (jnp.empty((0, 0), jnp.float32) if device
+                    else np.empty((0, 0), np.float32))
+        return jnp.concatenate(out) if device else np.concatenate(out)
 
     def encode_corpus(self, ids: Sequence, texts: Sequence[str],
-                      cache: EmbeddingCache | None = None) -> np.ndarray:
-        """Encode (with cache read/write) the given corpus slice."""
+                      cache: EmbeddingCache | None = None,
+                      device: bool = False):
+        """Encode (with cache read/write) the given corpus slice.
+
+        ``device=True`` without a cache keeps encoder output
+        device-resident (the online regime: no d2h+h2d round-trip per
+        chunk for the device score backends); cache read/write is a host
+        path regardless, since the mmap'd cache stores numpy rows."""
+        if cache is None and device:
+            return self._encode_texts(texts, False, device=True)
         if cache is not None and len(cache):
             have = cache.has(ids)
         else:
@@ -84,6 +162,19 @@ class RetrievalEvaluator:
             embs[np.nonzero(have)[0]] = got
         return embs
 
+    def _corpus_hashes(self, corpus: dict) -> np.ndarray:
+        keys = list(corpus.keys())
+        cached = self._corpus_hash_cache
+        # key-list equality (cheap C-level compare, pointer fast path)
+        # rather than identity alone: an in-place mutated dict must not
+        # serve stale hashes
+        if (cached is not None and cached[0] is corpus
+                and cached[1] == keys):
+            return cached[2]
+        hashes = stable_id_hash_array(keys)
+        self._corpus_hash_cache = (corpus, keys, hashes)
+        return hashes
+
     # -- search ----------------------------------------------------------------
     def search(self, queries: dict[str, str], corpus: dict[str, str],
                topk: int | None = None,
@@ -95,8 +186,11 @@ class RetrievalEvaluator:
         default — 63-bit hashes would truncate on device).
         """
         topk = topk or self.args.topk
+        backend = get_score_backend(self.args.score_impl)
+        on_device = self.args.score_impl != "numpy"
         q_ids = list(queries.keys())
-        q_emb = self._encode_texts([queries[q] for q in q_ids], True)
+        q_emb = self._encode_texts([queries[q] for q in q_ids], True,
+                                   device=on_device)
         heap = FastResultHeapq(len(q_ids), topk, impl=self.args.heap_impl)
 
         c_ids = list(corpus.keys())
@@ -109,17 +203,16 @@ class RetrievalEvaluator:
         for off in range(0, len(my_ids), bs):
             chunk_ids = my_ids[off: off + bs]
             embs = self.encode_corpus(
-                chunk_ids, [corpus[c] for c in chunk_ids], cache)
-            positions = np.arange(lo + off, lo + off + len(chunk_ids),
-                                  dtype=np.int32)
-            heap.update(q_emb @ embs.T, positions)
+                chunk_ids, [corpus[c] for c in chunk_ids], cache,
+                device=on_device)
+            backend(q_emb, embs, lo + off, heap, topk)
         self.sharder.update(self.process_index, len(my_ids),
                             time.monotonic() - t0)
         heap = self._merge_shards(heap)
         vals, pos = heap.finalize()
-        all_hashes = np.asarray([stable_id_hash(c) for c in c_ids], np.int64)
+        all_hashes = self._corpus_hashes(corpus)
         ids = np.where(pos >= 0, all_hashes[np.clip(pos, 0, None)], -1)
-        q_hashes = np.asarray([stable_id_hash(q) for q in q_ids], np.int64)
+        q_hashes = stable_id_hash_array(q_ids)
         return q_hashes, ids, vals
 
     def _merge_shards(self, heap: FastResultHeapq) -> FastResultHeapq:
@@ -133,10 +226,7 @@ class RetrievalEvaluator:
         all_i = multihost_utils.process_allgather(jnp.asarray(ids))
         merged = FastResultHeapq(vals.shape[0], heap.k, impl="jax")
         for p in range(all_v.shape[0]):
-            shard = FastResultHeapq(vals.shape[0], heap.k, impl="jax")
-            shard.vals = jnp.asarray(all_v[p])
-            shard.ids = jnp.asarray(all_i[p])
-            merged.merge(shard)
+            merged.merge_arrays(all_v[p], all_i[p])
         return merged
 
     # -- public API ---------------------------------------------------------------
@@ -155,12 +245,15 @@ class RetrievalEvaluator:
                             qrels: dict[str, dict[str, float]],
                             depth: int | None = None,
                             exclude_positives: bool = True,
-                            output_path: str | None = None):
+                            output_path: str | None = None,
+                            cache: EmbeddingCache | None = None):
         """Top-ranked non-positives per query -> negative qrel triplets."""
         depth = depth or self.args.topk
         q_ids = list(queries.keys())
-        q_hashes, run_ids, scores = self.search(queries, corpus, topk=depth)
-        hash_to_raw = {stable_id_hash(c): c for c in corpus}
+        q_hashes, run_ids, scores = self.search(queries, corpus, topk=depth,
+                                                cache=cache)
+        hashes = self._corpus_hashes(corpus)
+        hash_to_raw = dict(zip(hashes.tolist(), corpus.keys()))
         out: list[tuple[str, str, float]] = []
         for qi, q in enumerate(q_ids):
             pos = {stable_id_hash(d) for d, g in qrels.get(q, {}).items()

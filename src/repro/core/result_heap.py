@@ -79,27 +79,39 @@ class FastResultHeapq:
             self.vals, self.ids, jnp.asarray(scores),
             jnp.asarray(chunk_ids), self.k)
 
-    def merge(self, other: "FastResultHeapq"):
-        """Merge another heap's state (cross-shard top-k reduction)."""
-        v, i = other.finalize()
+    def merge_arrays(self, vals, ids):
+        """Merge per-query candidate arrays vals (Q, m), ids (Q, m).
+
+        The entry point for fused score+top-k kernel output: each corpus
+        chunk already arrives reduced to (Q, k') on device, and merges
+        here without constructing a throwaway heap object.  ``ids`` < 0
+        marks empty slots (vals must be -inf there).
+        """
         if self.impl == "python":
+            v = np.asarray(vals)
+            i = np.asarray(ids)
             for q in range(self.n_queries):
+                h = self._heaps[q]
                 for c in range(v.shape[1]):
                     if i[q, c] < 0:
                         continue
                     item = (float(v[q, c]), int(i[q, c]))
-                    h = self._heaps[q]
                     if len(h) < self.k:
                         heapq.heappush(h, item)
                     elif item > h[0]:
                         heapq.heapreplace(h, item)
             return
-        cand_v = jnp.concatenate([self.vals, jnp.asarray(v)], axis=1)
+        cand_v = jnp.concatenate(
+            [self.vals, jnp.asarray(vals, jnp.float32)], axis=1)
         cand_i = jnp.concatenate(
-            [self.ids, jnp.asarray(i).astype(self.ids.dtype)], axis=1)
+            [self.ids, jnp.asarray(ids).astype(self.ids.dtype)], axis=1)
         top_v, pos = jax.lax.top_k(cand_v, self.k)
         self.vals = top_v
         self.ids = jnp.take_along_axis(cand_i, pos, axis=1)
+
+    def merge(self, other: "FastResultHeapq"):
+        """Merge another heap's state (cross-shard top-k reduction)."""
+        self.merge_arrays(*other.finalize())
 
     def finalize(self):
         """-> (scores (Q,k) desc-sorted, doc_ids (Q,k)); -1 id == empty."""

@@ -55,15 +55,17 @@ def topk_update(vals, ids, scores, chunk_ids, *, bq: int = 128,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k", "id_offset", "bq", "bn",
-                                    "interpret"))
-def _fused_jit(queries, docs, k, id_offset, bq, bn, interpret):
-    return _topk.fused_score_topk_pallas(
-        queries, docs, k, id_offset=id_offset, bq=bq, bn=bn,
-        interpret=interpret)
+                   static_argnames=("k", "bq", "bn", "interpret"))
+def _fused_jit(queries, docs, id_offset, k, bq, bn, interpret):
+    out_v, out_i = _topk.fused_score_topk_pallas(
+        queries, docs, k, id_offset=0, bq=bq, bn=bn, interpret=interpret)
+    # id_offset is applied outside the kernel as a *traced* scalar: the
+    # evaluator's streaming search passes a different offset per corpus
+    # chunk, which must not recompile the kernel each time.
+    return out_v, jnp.where(out_i >= 0, out_i + id_offset, -1)
 
 
-def fused_score_topk(queries, docs, k: int, *, id_offset: int = 0,
+def fused_score_topk(queries, docs, k: int, *, id_offset=0,
                      bq: int = 128, bn: int = 512,
                      interpret: bool | None = None):
     """Top-k of queries @ docs.T with no HBM score matrix (beyond-paper)."""
@@ -71,7 +73,8 @@ def fused_score_topk(queries, docs, k: int, *, id_offset: int = 0,
     q = queries.shape[0]
     queries_p = _pad_axis(jnp.asarray(queries), 0, 8, 0.0)
     docs = jnp.asarray(docs)
-    out_v, out_i = _fused_jit(queries_p, docs, k, id_offset, bq,
+    out_v, out_i = _fused_jit(queries_p, docs,
+                              jnp.asarray(id_offset, jnp.int32), k, bq,
                               min(bn, max(docs.shape[0], 8)), interpret)
     return out_v[:q], out_i[:q]
 

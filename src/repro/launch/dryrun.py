@@ -30,7 +30,8 @@ from repro.configs import all_cells, get_arch
 from repro.launch.memmodel import memory_model
 from repro.launch.mesh import make_production_mesh
 from repro.launch.roofline import (collective_breakdown, collective_bytes,
-                                   model_flops, roofline_terms)
+                                   model_flops, normalize_cost,
+                                   roofline_terms)
 
 
 # archs whose unrolled-HLO compile is impractically slow on this 1-core
@@ -61,7 +62,7 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.monotonic() - t0 - t_lower
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = normalize_cost(compiled.cost_analysis())
     hlo_text = compiled.as_text()
     coll = collective_bytes(hlo_text)
     breakdown = [

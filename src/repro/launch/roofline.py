@@ -126,7 +126,22 @@ def collective_breakdown(hlo_text: str, top: int = 8):
     return out[:top]
 
 
+def normalize_cost(cost) -> dict:
+    """Version-tolerant ``compiled.cost_analysis()`` result -> flat dict.
+
+    Newer JAX returns the properties dict directly; older releases return
+    a one-element list of per-computation dicts (summed here)."""
+    if isinstance(cost, (list, tuple)):
+        merged: dict = {}
+        for c in cost:
+            for k, v in (c or {}).items():
+                merged[k] = merged.get(k, 0.0) + v
+        return merged
+    return dict(cost or {})
+
+
 def roofline_terms(cost: dict, coll_bytes: int) -> dict[str, float]:
+    cost = normalize_cost(cost)
     flops = float(cost.get("flops", 0.0))
     bytes_acc = float(cost.get("bytes accessed", 0.0))
     compute_s = flops / PEAK_FLOPS

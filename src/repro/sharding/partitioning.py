@@ -158,8 +158,6 @@ def model_parallelism(mesh: Mesh) -> int:
 
 def local_mesh() -> Mesh:
     """A mesh over whatever devices exist (tests / single host runs)."""
+    from repro.sharding import make_mesh
     n = len(jax.devices())
-    return jax.make_mesh(
-        (1, n), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((1, n), ("data", "model"))

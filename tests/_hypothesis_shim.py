@@ -1,0 +1,50 @@
+"""Optional-``hypothesis`` shim (the spirit of ``pytest.importorskip``,
+scoped to the property tests only).
+
+``pytest.importorskip("hypothesis")`` at module top would skip *every*
+test in the module; importing from here instead keeps the example-based
+tests running everywhere, runs the property tests when hypothesis is
+installed, and turns each ``@given`` test into an individual skip when
+it is not.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stand-in for ``hypothesis.strategies``: strategies built here
+        are only ever passed to the stub ``given`` below, so any callable
+        returning None suffices."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*args, **kwargs):
+        if args and callable(args[0]):               # bare @settings
+            return args[0]
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # Zero-arg replacement: pytest must not mistake the
+            # hypothesis-bound parameters for fixtures.
+            def skipped():
+                pytest.skip("hypothesis not installed")
+            skipped.__name__ = fn.__name__
+            skipped.__doc__ = fn.__doc__
+            return skipped
+        return deco
+
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -1,7 +1,7 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings
+from _hypothesis_shim import st
 
 from repro.core.collator import RetrievalCollator
 from repro.core.config import DataArguments

@@ -15,11 +15,12 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import jax
 from repro.configs import get_arch
-from repro.launch.roofline import collective_bytes, roofline_terms
+from repro.launch.roofline import collective_bytes, normalize_cost, \
+    roofline_terms
 from repro.launch.memmodel import memory_model
+from repro.sharding import make_mesh
 
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
 out = {}
 for name, shape in [("qwen2-0.5b", "train_4k"),
                     ("granite-moe-3b-a800m", "decode_32k"),
@@ -29,7 +30,7 @@ for name, shape in [("qwen2-0.5b", "train_4k"),
     cell = arch.build_cell(shape, mesh=mesh)
     lowered = jax.jit(cell.fn, **cell.jit_kwargs).lower(*cell.abstract_args)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = normalize_cost(compiled.cost_analysis())
     coll = collective_bytes(compiled.as_text())
     terms = roofline_terms(cost, coll["total"])
     mm = memory_model(arch, shape, mesh, cell)

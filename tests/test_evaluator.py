@@ -70,6 +70,48 @@ def test_multi_shard_merge_equals_single(tiny_retriever, tiny_params,
     np.testing.assert_array_equal(ids1, ids2)
 
 
+def test_mining_forwards_cache(evaluator, retrieval_data, tmp_path):
+    """Mining with a warm cache must not re-encode cached corpus ids
+    (the paper's Table 3 "w/ Cached Embs" path)."""
+    cache = EmbeddingCache(str(tmp_path / "c"), dim=32)
+    evaluator.evaluate(retrieval_data["queries"], retrieval_data["corpus"],
+                       retrieval_data["qrels"], cache=cache)
+    assert len(cache) == len(retrieval_data["corpus"])
+
+    corpus_encodes = []
+    orig = evaluator._encode_texts
+
+    def counting(texts, is_query, max_len=None, device=False):
+        if not is_query:
+            corpus_encodes.append(len(texts))
+        return orig(texts, is_query, max_len, device=device)
+
+    evaluator._encode_texts = counting
+    try:
+        negs = evaluator.mine_hard_negatives(
+            retrieval_data["queries"], retrieval_data["corpus"],
+            retrieval_data["qrels"], depth=8, cache=cache)
+    finally:
+        evaluator._encode_texts = orig
+    assert negs
+    assert corpus_encodes == []     # every corpus chunk came from the cache
+
+
+def test_corpus_hash_cache_detects_mutation(evaluator, retrieval_data):
+    """In-place corpus mutation (same object, same length) must not be
+    served stale hashes from the per-corpus cache."""
+    corpus = dict(retrieval_data["corpus"])
+    h1 = evaluator._corpus_hashes(corpus)
+    assert evaluator._corpus_hashes(corpus) is h1      # cache hit
+    first = next(iter(corpus))
+    del corpus[first]
+    corpus["brand-new-doc"] = "text"                   # same len as before
+    h2 = evaluator._corpus_hashes(corpus)
+    from repro.data.table import stable_id_hash
+    assert stable_id_hash("brand-new-doc") in h2
+    assert stable_id_hash(first) not in h2
+
+
 def test_mining_excludes_positives(evaluator, retrieval_data):
     negs = evaluator.mine_hard_negatives(
         retrieval_data["queries"], retrieval_data["corpus"],
@@ -107,6 +149,97 @@ def test_heap_impls_agree_end_to_end(tiny_retriever, tiny_params,
         results[impl] = ids
     np.testing.assert_array_equal(results["jax"], results["python"])
     np.testing.assert_array_equal(results["jax"], results["pallas"])
+
+
+# -- cross-backend equivalence -----------------------------------------------------
+
+SCORE_IMPLS = ("numpy", "jax", "pallas_fused")
+HEAP_IMPLS = ("jax", "python", "pallas")
+
+
+@pytest.fixture(scope="module")
+def backend_env(tiny_retriever, tiny_params, retrieval_data,
+                tmp_path_factory):
+    """Shared warm cache + numpy/jax reference results for the
+    score_impl x heap_impl equivalence matrix."""
+    coll = RetrievalCollator(DataArguments(vocab_size=257),
+                             HashTokenizer(257))
+    cache = EmbeddingCache(str(tmp_path_factory.mktemp("beq") / "c"),
+                           dim=32)
+
+    def make(score_impl, heap_impl="jax", **kw):
+        # encode_batch_size=20 leaves a ragged last chunk (96 % 20 != 0)
+        return RetrievalEvaluator(
+            EvaluationArguments(topk=10, encode_batch_size=20,
+                                score_impl=score_impl, heap_impl=heap_impl,
+                                metrics=("ndcg@10", "recall@10")),
+            tiny_retriever, coll, tiny_params, **kw)
+
+    ref = make("numpy", "jax")
+    # warm the cache first: the first pass scores fresh float32 encodings,
+    # later passes the float16-quantized cache — the reference must be
+    # computed in the same (warm) regime every backend will see
+    ref.search(retrieval_data["queries"], retrieval_data["corpus"],
+               cache=cache)
+    run = ref.search(retrieval_data["queries"], retrieval_data["corpus"],
+                     cache=cache)
+    metrics = ref.evaluate(retrieval_data["queries"],
+                           retrieval_data["corpus"],
+                           retrieval_data["qrels"], cache=cache)
+    return {"make": make, "cache": cache, "run": run, "metrics": metrics}
+
+
+@pytest.mark.parametrize("heap_impl", HEAP_IMPLS)
+@pytest.mark.parametrize("score_impl", SCORE_IMPLS)
+def test_backend_matrix_identical_rankings(backend_env, retrieval_data,
+                                           score_impl, heap_impl):
+    """Every score_impl x heap_impl combination returns the reference
+    ranking bit-for-bit and the same evaluate() metrics."""
+    ev = backend_env["make"](score_impl, heap_impl)
+    qh, ids, vals = ev.search(retrieval_data["queries"],
+                              retrieval_data["corpus"],
+                              cache=backend_env["cache"])
+    rqh, rids, rvals = backend_env["run"]
+    np.testing.assert_array_equal(qh, rqh)
+    np.testing.assert_array_equal(ids, rids)
+    np.testing.assert_allclose(vals, rvals, rtol=1e-5, atol=1e-6)
+    metrics = ev.evaluate(retrieval_data["queries"],
+                          retrieval_data["corpus"],
+                          retrieval_data["qrels"],
+                          cache=backend_env["cache"])
+    for name, want in backend_env["metrics"].items():
+        assert abs(metrics[name] - want) < 1e-9, name
+
+
+@pytest.mark.parametrize("score_impl", SCORE_IMPLS)
+def test_backend_shard_merge_equals_single(backend_env, retrieval_data,
+                                           score_impl):
+    """2 simulated nodes (shard_merge_fn transport) == 1 node, for every
+    scoring backend."""
+    shards = {}
+
+    def merge_via_bus(heap):
+        shards[merge_via_bus.rank] = heap
+        if len(shards) < 2:
+            return heap
+        a, b = shards[0], shards[1]
+        a.merge(b)
+        return a
+
+    evs = [backend_env["make"](score_impl, process_index=rank,
+                               process_count=2,
+                               shard_merge_fn=merge_via_bus)
+           for rank in range(2)]
+    merge_via_bus.rank = 0
+    evs[0].search(retrieval_data["queries"], retrieval_data["corpus"],
+                  cache=backend_env["cache"])
+    merge_via_bus.rank = 1
+    qh, ids, vals = evs[1].search(retrieval_data["queries"],
+                                  retrieval_data["corpus"],
+                                  cache=backend_env["cache"])
+    rqh, rids, rvals = backend_env["run"]
+    np.testing.assert_array_equal(ids, rids)
+    np.testing.assert_allclose(vals, rvals, rtol=1e-5, atol=1e-6)
 
 
 # -- fair sharding -----------------------------------------------------------------

@@ -4,8 +4,8 @@ sweeping shapes and dtypes per the spec."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings
+from _hypothesis_shim import st
 
 from repro.kernels import ops, ref
 
@@ -44,6 +44,21 @@ def test_fused_score_topk(q, d, n, k, dtype, rng):
     # id agreement can differ on near-ties under bf16: check score parity
     if dtype == jnp.float32:
         np.testing.assert_array_equal(np.asarray(fi), np.asarray(ri))
+
+
+def test_fused_id_offset_traced_no_recompile(rng):
+    """The streaming search passes a different id_offset per corpus chunk;
+    offsets must shift ids without triggering a recompile per chunk."""
+    qs = jnp.asarray(rng.normal(size=(4, 16)).astype(np.float32))
+    ds = jnp.asarray(rng.normal(size=(32, 16)).astype(np.float32))
+    v0, i0 = ops.fused_score_topk(qs, ds, 5, id_offset=0)
+    before = (ops._fused_jit._cache_size()
+              if hasattr(ops._fused_jit, "_cache_size") else None)
+    v1, i1 = ops.fused_score_topk(qs, ds, 5, id_offset=1000)
+    if before is not None:
+        assert ops._fused_jit._cache_size() == before
+    np.testing.assert_allclose(np.asarray(v1), np.asarray(v0))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i0) + 1000)
 
 
 def test_fused_block_sizes(rng):

@@ -1,7 +1,7 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_shim import given, settings
+from _hypothesis_shim import st
 
 from repro.core.result_heap import FastResultHeapq
 
@@ -41,6 +41,42 @@ def test_merge_equals_single_stream(rng):
     mv, mi = merged.finalize()
     np.testing.assert_allclose(wv, mv, rtol=1e-6)
     np.testing.assert_array_equal(wi, mi)
+
+
+@pytest.mark.parametrize("impl", ["python", "jax", "pallas"])
+def test_merge_arrays_equals_merge(impl, rng):
+    """Array-level merge (fused-kernel output path) == object merge."""
+    q, k, c = 5, 6, 21
+    chunks = list(_stream(rng, q, 6, c))
+    other = FastResultHeapq(q, k)
+    for s, i in chunks[3:]:
+        other.update(s, i)
+
+    via_obj = FastResultHeapq(q, k, impl=impl)
+    via_arr = FastResultHeapq(q, k, impl=impl)
+    for s, i in chunks[:3]:
+        via_obj.update(s, i)
+        via_arr.update(s, i)
+    via_obj.merge(other)
+    via_arr.merge_arrays(*other.finalize())
+
+    ov, oi = via_obj.finalize()
+    av, ai = via_arr.finalize()
+    np.testing.assert_allclose(ov, av, rtol=1e-6)
+    np.testing.assert_array_equal(oi, ai)
+
+
+@pytest.mark.parametrize("impl", ["python", "jax"])
+def test_merge_arrays_ignores_empty_slots(impl):
+    """-1 ids (unfilled fused-kernel slots) never surface as results."""
+    h = FastResultHeapq(2, 3, impl=impl)
+    vals = np.asarray([[1.0, -np.inf, -np.inf],
+                       [2.0, 0.5, -np.inf]], np.float32)
+    ids = np.asarray([[7, -1, -1], [9, 4, -1]], np.int32)
+    h.merge_arrays(vals, ids)
+    v, i = h.finalize()
+    np.testing.assert_array_equal(i, [[7, -1, -1], [9, 4, -1]])
+    assert np.isneginf(v[0, 1:]).all() and np.isneginf(v[1, 2])
 
 
 def test_fewer_candidates_than_k(rng):

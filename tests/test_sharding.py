@@ -4,6 +4,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.roofline import collective_bytes
+from repro.sharding import make_mesh
 from repro.sharding.partitioning import (AxisRules, data_axes,
                                          data_parallelism)
 
@@ -11,8 +12,7 @@ from repro.sharding.partitioning import (AxisRules, data_axes,
 @pytest.fixture(scope="module")
 def mesh():
     # 1-device meshes still exercise the rule resolution logic
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 class FakeMesh:

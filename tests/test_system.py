@@ -18,6 +18,9 @@ from repro import (BinaryDataset, DataArguments, EvaluationArguments,
                    RetrievalTrainer)
 from repro.models.transformer import LMConfig
 
+# full train->evaluate->mine round trip: minutes of CPU work
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def system(tmp_path_factory):

@@ -5,7 +5,25 @@ import numpy as np
 import pytest
 
 from repro.data.table import (MMapTable, atomic_write_dir, file_fingerprint,
-                              stable_id_hash)
+                              stable_id_hash, stable_id_hash_array)
+
+
+def test_hash_array_matches_scalar():
+    """Vectorized hashing == per-element hashing for every id flavor,
+    including Python ints beyond int64 (scalar masks at arbitrary
+    precision; the array path must not OverflowError)."""
+    cases = [
+        ["doc-a", "doc-b", ""],                       # strings
+        [0, 7, -5, 2**62],                            # int64-range ints
+        [2**63, 2**64 + 3, -2**63],                   # beyond-int64 ints
+        np.asarray([1, 2, 3], np.uint64),             # unsigned ndarray
+    ]
+    for ids in cases:
+        got = stable_id_hash_array(ids)
+        want = [stable_id_hash(int(i) if isinstance(i, np.integer) else i)
+                for i in ids]
+        assert got.dtype == np.int64
+        assert got.tolist() == want, ids
 
 
 def _records(n):

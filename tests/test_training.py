@@ -93,8 +93,8 @@ def test_elastic_restore_resharding(tmp_path):
     loss): values must be identical regardless of topology."""
     state = _state()
     path = ckpt.save_checkpoint(str(tmp_path), 1, state)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.sharding import make_mesh
+    mesh = make_mesh((1,), ("data",))
     sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
     shardings = jax.tree.map(lambda _: sh, state)
     restored = ckpt.restore_checkpoint(path, state, shardings)
