@@ -39,6 +39,12 @@ def _select_topk_into(out_v_ref, out_i_ref, cand_v, cand_i, k: int):
         first = jnp.min(jnp.where(at_max, iota, cv.shape[1]), axis=1)
         onehot = iota == first[:, None]
         sel_id = jnp.max(jnp.where(onehot, ci, -1), axis=1)
+        # -inf means "empty / never retrieve": emit -1, not the id.  The
+        # NEG_INF mask below can't distinguish an already-selected
+        # position from a genuinely empty one — without this, once the
+        # running max hits -inf the first selected position would be
+        # re-picked and re-emit its real id (duplicate ids in the tail).
+        sel_id = jnp.where(m == NEG_INF, -1, sel_id)
         out_v_ref[:, pl.ds(j, 1)] = m[:, None]
         out_i_ref[:, pl.ds(j, 1)] = sel_id[:, None]
         return jnp.where(onehot, NEG_INF, cv), ci

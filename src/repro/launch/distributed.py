@@ -1,0 +1,139 @@
+"""Multi-node launch utilities for the sharded search driver.
+
+Two ways to get a W-worker cluster:
+
+  * **real nodes** — ``init_distributed()`` wraps
+    ``jax.distributed.initialize`` (env-driven: coordinator address,
+    process count/id) and returns this process's ``(rank, world_size)``;
+    the evaluator then uses ``ProcessAllGather`` automatically.  Zero
+    code changes versus single node: the same script, launched once per
+    node.
+  * **simulated** — :class:`SimulatedCluster` runs W *real*
+    ``ShardedSearchDriver`` / ``RetrievalEvaluator`` instances inside one
+    process (worker threads), wired to a shared ``FairSharder`` and a
+    deterministic :class:`InMemoryAllGather`.  Used by the equivalence
+    tests, ``benchmarks/bench_multinode.py``, and
+    ``launch/serve.py --workers N``.
+
+Determinism: ``InMemoryAllGather.merge`` always folds rank states in
+rank order (exactly like ``ProcessAllGather``), so the merged ranking is
+independent of thread scheduling and every worker returns an identical
+result.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, Sequence
+
+from repro.core.fair_sharding import FairSharder
+from repro.core.result_heap import FastResultHeapq
+
+
+def init_distributed(coordinator_address: str | None = None,
+                     num_processes: int | None = None,
+                     process_id: int | None = None) -> tuple[int, int]:
+    """Initialize ``jax.distributed`` when a multi-process launch is
+    requested; return ``(process_index, process_count)``.
+
+    With all arguments ``None`` this is env-driven
+    (``JAX_COORDINATOR_ADDRESS`` etc. / cloud auto-detection) and a
+    no-op single-process fallback otherwise, so the same script runs
+    unchanged on one node or many.
+    """
+    import jax
+
+    if num_processes is not None and num_processes > 1:
+        jax.distributed.initialize(
+            coordinator_address=coordinator_address,
+            num_processes=num_processes, process_id=process_id)
+    return jax.process_index(), jax.process_count()
+
+
+class InMemoryAllGather:
+    """Deterministic in-process stand-in for ``ProcessAllGather``.
+
+    W worker threads each contribute their local (Q, k) state; a barrier
+    guarantees all states are present; every worker then merges them
+    **in rank order** and returns an identical merged heap.  A second
+    barrier prevents a fast worker from starting the next round while a
+    slow one is still reading this round's states.
+    """
+
+    def __init__(self, world_size: int):
+        self.world_size = world_size
+        self._states: dict[int, tuple] = {}
+        self._barrier = threading.Barrier(world_size)
+
+    def abort(self) -> None:
+        """Break the barrier so sibling workers fail fast instead of
+        deadlocking when one worker dies mid-round."""
+        self._barrier.abort()
+
+    def merge(self, heap: FastResultHeapq,
+              worker_index: int) -> FastResultHeapq:
+        vals, ids = heap.finalize()
+        self._states[worker_index] = (vals, ids)
+        self._barrier.wait()                 # all W states are visible
+        merged = FastResultHeapq(vals.shape[0], heap.k, impl=heap.impl)
+        for rank in range(self.world_size):
+            merged.merge_arrays(*self._states[rank])
+        self._barrier.wait()                 # all read before round reuse
+        return merged
+
+
+class SimulatedCluster:
+    """W real driver/evaluator instances in one process.
+
+    Construct once, hand ``gather`` and ``sharder`` to W drivers (or
+    evaluators with ``process_index=rank, process_count=W``), then
+    ``run(worker_fn)`` executes ``worker_fn(rank)`` on W threads and
+    returns all ranks' results.  Because :class:`InMemoryAllGather`
+    merges in rank order, all results are identical.
+    """
+
+    def __init__(self, world_size: int):
+        self.world_size = world_size
+        self.gather = InMemoryAllGather(world_size)
+        self.sharder = FairSharder(world_size)
+
+    def run(self, worker_fn: Callable[[int], object]) -> list:
+        results: list = [None] * self.world_size
+        errors: list = [None] * self.world_size
+
+        def target(rank: int) -> None:
+            try:
+                results[rank] = worker_fn(rank)
+            except BaseException as exc:     # noqa: BLE001 — re-raised below
+                errors[rank] = exc
+                self.gather.abort()
+
+        threads = [threading.Thread(target=target, args=(rank,),
+                                    name=f"sim-worker-{rank}")
+                   for rank in range(self.world_size)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for exc in errors:
+            if exc is not None and not isinstance(
+                    exc, threading.BrokenBarrierError):
+                raise exc
+        for exc in errors:                   # only barrier casualties left
+            if exc is not None:
+                raise exc
+        return results
+
+
+def simulated_search(world_size: int, make_evaluator,
+                     queries: dict, corpus: dict, **search_kw) -> tuple:
+    """One-call helper: build W evaluators via ``make_evaluator(rank,
+    world, gather, sharder)``, run a full sharded search, and return
+    rank 0's ``(q_hashes, ids, scores)`` (all ranks are identical)."""
+    cluster = SimulatedCluster(world_size)
+    evaluators = [make_evaluator(rank, world_size, cluster.gather,
+                                 cluster.sharder)
+                  for rank in range(world_size)]
+    outs = cluster.run(
+        lambda rank: evaluators[rank].search(queries, corpus, **search_kw))
+    return outs[0]

@@ -2,6 +2,13 @@
 then answer batched query requests with FastResultHeapq top-k.
 
   python -m repro.launch.serve --data-dir /tmp/trove_data --topk 10
+
+Multi-node story (zero code changes, paper §3.5): the same script serves
+from W workers through ``ShardedSearchDriver``.  ``--workers N`` runs N
+real driver instances in this process (``SimulatedCluster``); on a real
+cluster, launch the script once per node under ``jax.distributed`` (see
+``repro.launch.distributed.init_distributed``) and each process takes a
+fair-sharded corpus slice automatically.
 """
 
 from __future__ import annotations
@@ -36,6 +43,13 @@ def main(argv=None):
     ap.add_argument("--topk", type=int, default=10)
     ap.add_argument("--n-requests", type=int, default=4)
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="0 = use jax process count (multi-node under "
+                         "jax.distributed); 1 = force single-worker; "
+                         "N>1 = simulate N workers in-process via "
+                         "ShardedSearchDriver")
+    ap.add_argument("--score-impl", default="jax",
+                    choices=("numpy", "jax", "pallas_fused"))
     args = ap.parse_args(argv)
 
     arch = get_arch(args.arch)
@@ -67,21 +81,54 @@ def main(argv=None):
             params = state["params"]
             print(f"restored {path}")
 
-    ev = RetrievalEvaluator(
-        EvaluationArguments(topk=args.topk), retriever, collator, params)
+    eval_args = EvaluationArguments(topk=args.topk,
+                                    score_impl=args.score_impl)
     cache = EmbeddingCache(os.path.join(args.data_dir, "emb_cache"),
                            dim=arch.cfg.d_model)
+    if args.workers > 1:
+        # W real driver instances in this process, deterministic
+        # in-memory all-gather — the same code path as W real nodes
+        from repro.launch.distributed import SimulatedCluster
+        cluster = SimulatedCluster(args.workers)
+        evs = [RetrievalEvaluator(eval_args, retriever, collator, params,
+                                  process_index=rank,
+                                  process_count=args.workers,
+                                  gather=cluster.gather,
+                                  sharder=cluster.sharder)
+               for rank in range(args.workers)]
+
+        def answer(req):
+            return cluster.run(
+                lambda rank: evs[rank].search(req, corpus, cache=cache))[0]
+        label = f"{args.workers} simulated workers"
+    elif args.workers == 1:
+        # forced single-worker baseline, even under jax.distributed
+        ev = RetrievalEvaluator(eval_args, retriever, collator, params,
+                                process_index=0, process_count=1)
+
+        def answer(req):
+            return ev.search(req, corpus, cache=cache)
+        label = "1 worker (forced)"
+    else:
+        # jax process count: 1 standalone, or W under jax.distributed —
+        # the evaluator picks the ProcessAllGather transport itself
+        ev = RetrievalEvaluator(eval_args, retriever, collator, params)
+
+        def answer(req):
+            return ev.search(req, corpus, cache=cache)
+        label = f"{ev.process_count} process(es)"
+
     # warm the corpus cache (the expensive pass, done once)
     t0 = time.monotonic()
     q_ids = list(queries)
     for i in range(args.n_requests):
         lo = (i * args.batch) % len(q_ids)
         req = {q: queries[q] for q in q_ids[lo: lo + args.batch]}
-        qh, ids, scores = ev.search(req, corpus, cache=cache)
+        qh, ids, scores = answer(req)
         dt = time.monotonic() - t0
         t0 = time.monotonic()
         print(f"request {i}: {len(req)} queries -> top-{args.topk} "
-              f"in {dt*1e3:.1f} ms "
+              f"in {dt*1e3:.1f} ms on {label} "
               f"(cache {len(cache)}/{len(corpus)} docs)")
     print("serving done")
 

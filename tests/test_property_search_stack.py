@@ -1,0 +1,313 @@
+"""Property-test harness for the search stack (FastResultHeapq +
+FairSharder), pinned to brute-force oracles.
+
+The check bodies are plain helpers shared by two entry points:
+
+  * ``@given`` property tests — run when ``hypothesis`` is installed,
+    skip individually otherwise (``tests/_hypothesis_shim.py``);
+  * example-based grid tests — always run, covering ties, NaN, -inf,
+    ``k > corpus size`` and permutation-invariance on a fixed grid.
+
+Oracle semantics (see ``FastResultHeapq`` docstring): NaN and -inf
+scores mean "never retrieve" — they sanitize to -inf and never surface
+a doc id in any impl.  On finite score *ties* the impls may break
+differently (heapq keeps the larger id, lax.top_k the earlier
+candidate), so the oracle pins exact top-k *values* for every impl, plus
+id validity (each returned id really has that score, no duplicates,
+ids surface iff the slot value is above -inf); id-level equality is
+additionally pinned whenever scores are unique.
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+from _hypothesis_shim import given, settings, st
+
+from repro.core.fair_sharding import FairSharder
+from repro.core.result_heap import FastResultHeapq
+
+# -- oracles ------------------------------------------------------------------
+
+
+def _sanitize(scores: np.ndarray) -> np.ndarray:
+    return np.where(np.isnan(scores), -np.inf, scores).astype(np.float32)
+
+
+def _oracle_topk_vals(scores: np.ndarray, k: int) -> np.ndarray:
+    """Brute-force: descending argsort of the sanitized full (Q, N)
+    matrix, padded with -inf up to k (the heap's empty-slot value)."""
+    s = _sanitize(scores)
+    vals = -np.sort(-s, axis=1)[:, :k]
+    if vals.shape[1] < k:
+        pad = np.full((s.shape[0], k - vals.shape[1]), -np.inf, np.float32)
+        vals = np.concatenate([vals, pad], axis=1)
+    return vals
+
+
+def _check_heap_vs_oracle(scores: np.ndarray, k: int, n_chunks: int,
+                          impl: str, via_merge_arrays: bool = False):
+    """Stream ``scores`` (Q, N) in ``n_chunks`` pieces through ``update``
+    (or per-chunk ``merge_arrays`` of pre-reduced states) and compare
+    against the brute-force oracle."""
+    q, n = scores.shape
+    heap = FastResultHeapq(q, k, impl=impl)
+    edges = np.linspace(0, n, n_chunks + 1).astype(int)
+    for lo, hi in zip(edges, edges[1:]):
+        if lo == hi:
+            continue
+        ids = np.arange(lo, hi, dtype=np.int32)
+        if via_merge_arrays:
+            shard = FastResultHeapq(q, k, impl=impl)
+            shard.update(scores[:, lo:hi], ids)
+            heap.merge_arrays(*shard.finalize())
+        else:
+            heap.update(scores[:, lo:hi], ids)
+    vals, ids = heap.finalize()
+    np.testing.assert_array_equal(vals, _oracle_topk_vals(scores, k))
+    s = _sanitize(scores)
+    for qi in range(q):
+        seen = set()
+        for j in range(k):
+            did = int(ids[qi, j])
+            if did >= 0:
+                assert did not in seen, "duplicate id surfaced"
+                seen.add(did)
+                assert s[qi, did] == vals[qi, j], \
+                    "id does not point at its score"
+                # "never retrieve": a surfaced id always has a score
+                # above the -inf sentinel, in every impl
+                assert not np.isneginf(vals[qi, j])
+            else:
+                # empty slot: value must be the -inf filler
+                assert np.isneginf(vals[qi, j])
+    # id-level oracle equality whenever scores are unique (no ties to
+    # break): every impl must match stable descending argsort exactly
+    if np.unique(s).size == s.size:
+        order = np.argsort(-s, axis=1, kind="stable")[:, :k]
+        kk = min(k, n)
+        valid = ~np.isneginf(np.take_along_axis(s, order[:, :kk], 1))
+        np.testing.assert_array_equal(
+            np.where(valid, ids[:, :kk], order[:, :kk]), order[:, :kk])
+
+
+def _check_merge_permutation_invariant(scores: np.ndarray, k: int,
+                                       n_shards: int, impl: str,
+                                       perm_seed: int):
+    """Merging any permutation of per-shard (Q, k) states yields the
+    same top-k values; identical ids too when scores are unique."""
+    q, n = scores.shape
+    edges = np.linspace(0, n, n_shards + 1).astype(int)
+    states = []
+    for lo, hi in zip(edges, edges[1:]):
+        shard = FastResultHeapq(q, k, impl=impl)
+        if hi > lo:
+            shard.update(scores[:, lo:hi],
+                         np.arange(lo, hi, dtype=np.int32))
+        states.append(shard.finalize())
+    rng = np.random.default_rng(perm_seed)
+    results = []
+    for _ in range(3):
+        order = rng.permutation(len(states))
+        merged = FastResultHeapq(q, k, impl=impl)
+        for si in order:
+            merged.merge_arrays(*states[si])
+        results.append(merged.finalize())
+    ref_vals, ref_ids = results[0]
+    np.testing.assert_array_equal(ref_vals, _oracle_topk_vals(scores, k))
+    unique = np.unique(_sanitize(scores)).size == scores.size
+    for vals, ids in results[1:]:
+        np.testing.assert_array_equal(vals, ref_vals)
+        if unique:
+            np.testing.assert_array_equal(ids, ref_ids)
+
+
+def _make_scores(q: int, n: int, seed: int, mode: str) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if mode == "unique":
+        # a shuffled arange: strictly distinct scores, exercises the
+        # id-level stable-order oracle
+        flat = rng.permutation(q * n).astype(np.float32)
+        return flat.reshape(q, n)
+    scores = rng.normal(size=(q, n)).astype(np.float32)
+    if mode == "ties":
+        scores = np.round(scores)            # heavy ties incl. +-0
+    elif mode == "nan":
+        scores[rng.random(size=scores.shape) < 0.15] = np.nan
+    elif mode == "neginf":
+        scores[rng.random(size=scores.shape) < 0.15] = -np.inf
+    elif mode == "mixed":
+        scores = np.round(scores * 2)
+        scores[rng.random(size=scores.shape) < 0.1] = np.nan
+        scores[rng.random(size=scores.shape) < 0.1] = -np.inf
+    return scores
+
+
+HEAP_MODES = ("unique", "ties", "nan", "neginf", "mixed")
+
+
+# -- example-based grid (always runs) -----------------------------------------
+
+
+@pytest.mark.parametrize("impl", ["python", "jax"])
+@pytest.mark.parametrize("mode", HEAP_MODES)
+def test_heap_grid_vs_oracle(impl, mode):
+    for (q, n, k, chunks), via_merge in itertools.product(
+            [(3, 40, 7, 4), (1, 5, 12, 2), (4, 17, 17, 3), (2, 8, 3, 1)],
+            [False, True]):
+        _check_heap_vs_oracle(_make_scores(q, n, seed=q * n + k, mode=mode),
+                              k, chunks, impl, via_merge_arrays=via_merge)
+
+
+@pytest.mark.parametrize("mode", ("unique", "mixed"))
+def test_heap_grid_vs_oracle_pallas(mode):
+    # pallas runs in interpret mode on CPU — keep the grid small
+    _check_heap_vs_oracle(_make_scores(2, 20, seed=3, mode=mode), 5, 2,
+                          "pallas")
+    # k > streamed candidates: regression for the topk kernel re-picking
+    # an already-selected position once the running max hits -inf and
+    # re-emitting its real id (duplicate ids in the tail)
+    _check_heap_vs_oracle(_make_scores(2, 12, seed=3, mode=mode), 15, 2,
+                          "pallas")
+
+
+@pytest.mark.parametrize("impl", ["python", "jax"])
+@pytest.mark.parametrize("mode", ("unique", "ties"))
+def test_merge_grid_permutation_invariant(impl, mode):
+    for q, n, k, shards in [(3, 30, 6, 3), (2, 11, 4, 5), (1, 6, 9, 2)]:
+        _check_merge_permutation_invariant(
+            _make_scores(q, n, seed=n + k, mode=mode), k, shards, impl,
+            perm_seed=17)
+
+
+# -- hypothesis property tests (skip without hypothesis) ----------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(q=st.integers(1, 5), n=st.integers(1, 48), k=st.integers(1, 14),
+       chunks=st.integers(1, 5), seed=st.integers(0, 10_000),
+       mode=st.sampled_from(HEAP_MODES), impl=st.sampled_from(
+           ["python", "jax"]),
+       via_merge=st.booleans())
+def test_property_heap_matches_oracle(q, n, k, chunks, seed, mode, impl,
+                                      via_merge):
+    """update/merge_arrays == brute-force argsort oracle for random
+    matrices with ties, NaN, -inf, and k > corpus size."""
+    _check_heap_vs_oracle(_make_scores(q, n, seed, mode), k, chunks, impl,
+                          via_merge_arrays=via_merge)
+
+
+@settings(max_examples=15, deadline=None)
+@given(q=st.integers(1, 4), n=st.integers(1, 40), k=st.integers(1, 10),
+       shards=st.integers(1, 6), seed=st.integers(0, 10_000),
+       mode=st.sampled_from(("unique", "ties", "mixed")),
+       impl=st.sampled_from(["python", "jax"]),
+       perm_seed=st.integers(0, 10_000))
+def test_property_merge_permutation_invariant(q, n, k, shards, seed, mode,
+                                              impl, perm_seed):
+    """Merging any permutation of shard states is order-invariant."""
+    _check_merge_permutation_invariant(_make_scores(q, n, seed, mode), k,
+                                       shards, impl, perm_seed)
+
+
+# -- FairSharder --------------------------------------------------------------
+
+
+def _check_sharder_invariants(n_workers: int, total: int,
+                              throughput: np.ndarray,
+                              min_share: float = 0.01):
+    s = FairSharder(n_workers, min_share=min_share)
+    s.throughput = np.asarray(throughput, np.float64)
+    sizes = s.shares(total)
+    assert sum(sizes) == total
+    assert all(sz >= 0 for sz in sizes)
+    bounds = s.bounds(total)
+    assert bounds[0][0] == 0 and bounds[-1][1] == total
+    for (a0, a1), (b0, b1) in zip(bounds, bounds[1:]):
+        assert a1 == b0, "bounds must be contiguous"
+        assert a1 >= a0, "bounds must be non-negative ranges"
+    # min_share holds after renormalization: each worker's fraction is at
+    # least min_share / (1 + n*min_share) (minus 1 item of float slop)
+    floor_items = int(np.floor(
+        total * min_share / (1 + n_workers * min_share))) - 1
+    assert all(sz >= max(0, floor_items) for sz in sizes)
+
+
+def _check_straggler_monotone(n_workers: int, total: int, rounds: int,
+                              slow_rate: float, fast_rate: float):
+    """Under repeated full rounds where worker 0 observes ``slow_rate``
+    items/s and the rest ``fast_rate``, worker 0's share never grows."""
+    s = FairSharder(n_workers)
+    prev = None
+    for _ in range(rounds):
+        shares = s.shares(total)
+        if prev is not None:
+            assert shares[0] <= prev, (shares, prev)
+        prev = shares[0]
+        for w in range(n_workers):
+            items = max(shares[w], 1)
+            rate = slow_rate if w == 0 else fast_rate
+            s.update(w, items, items / rate)
+
+
+def test_sharder_grid_invariants():
+    rng = np.random.default_rng(0)
+    for n, total in [(1, 0), (1, 17), (3, 100), (4, 103), (8, 3),
+                     (5, 1), (6, 1_000_003), (2, 2)]:
+        for tp in (np.ones(n), rng.uniform(0.01, 100.0, size=n),
+                   np.full(n, 1e-12)):
+            _check_sharder_invariants(n, total, tp)
+
+
+def test_sharder_grid_straggler_monotone():
+    for n, total, slow, fast in [(2, 1000, 0.2, 5.0), (4, 500, 0.5, 2.0),
+                                 (3, 10_000, 0.01, 1.0)]:
+        _check_straggler_monotone(n, total, rounds=8, slow_rate=slow,
+                                  fast_rate=fast)
+
+
+def test_sharder_total_smaller_than_workers_regression():
+    """total_items < n_workers: shares are single items handed to the
+    fastest workers, bounds stay contiguous, nothing goes negative."""
+    s = FairSharder(8)
+    s.update(3, 100, 1.0)                    # worker 3 looks fastest ...
+    for w in range(8):
+        if w != 3:
+            s.update(w, 10, 1.0)             # ... once the round commits
+    sizes = s.shares(3)
+    assert sum(sizes) == 3 and all(sz >= 0 for sz in sizes)
+    assert sizes[3] >= 1                     # fastest got one of the 3
+    bounds = s.bounds(3)
+    assert bounds[0][0] == 0 and bounds[-1][1] == 3
+    for (_, a1), (b0, _) in zip(bounds, bounds[1:]):
+        assert a1 == b0
+
+
+def test_sharder_zero_items_reports_complete_round():
+    """An empty-shard worker (items=0) must count toward round
+    completion without polluting the EMA."""
+    s = FairSharder(2)
+    s.update(0, 100, 1.0)
+    s.update(1, 0, 0.0)                      # empty shard
+    assert s.throughput[0] != 1.0            # round committed
+    assert s.throughput[1] == 1.0            # no signal, EMA untouched
+
+
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 16), total=st.integers(0, 1_000_000),
+       seed=st.integers(0, 10_000))
+def test_property_sharder_invariants(n, total, seed):
+    """Shares sum to total, bounds are contiguous/non-negative, and
+    min_share is respected, for arbitrary throughput states."""
+    rng = np.random.default_rng(seed)
+    _check_sharder_invariants(n, total, rng.uniform(1e-9, 1e6, size=n))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 8), total=st.integers(100, 100_000),
+       slow=st.floats(0.01, 0.9), fast=st.floats(1.0, 50.0),
+       rounds=st.integers(2, 10))
+def test_property_straggler_share_monotone(n, total, slow, fast, rounds):
+    """A straggler's share is monotonically non-increasing over repeated
+    slow rounds."""
+    _check_straggler_monotone(n, total, rounds, slow, fast)

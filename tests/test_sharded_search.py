@@ -1,0 +1,268 @@
+"""ShardedSearchDriver + SimulatedCluster: the multi-node equivalence
+matrix (paper §3.5 "same script, any number of nodes").
+
+Every ``score_impl`` × W ∈ {1, 2, 4} simulated workers must reproduce
+the seed single-process numpy path: bitwise-identical rankings and
+metrics, warm or cold EmbeddingCache, and every worker of a cluster must
+return the identical merged result.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.collator import RetrievalCollator
+from repro.core.config import DataArguments, EvaluationArguments
+from repro.core.embedding_cache import EmbeddingCache
+from repro.core.evaluator import RetrievalEvaluator
+from repro.core.metrics import compute_metrics
+from repro.core.sharded_search import ShardedSearchDriver
+from repro.data.table import stable_id_hash
+from repro.data.tokenizer import HashTokenizer
+from repro.launch.distributed import SimulatedCluster
+
+pytestmark = pytest.mark.distributed
+
+SCORE_IMPLS = ("numpy", "jax", "pallas_fused")
+WORLD_SIZES = (1, 2, 4)
+
+
+# -- driver-level tests (synthetic embeddings, no encoder) --------------------
+
+
+def _load_from(corpus_embs):
+    return lambda lo, hi: corpus_embs[lo:hi]
+
+
+@pytest.fixture()
+def synth():
+    rng = np.random.default_rng(7)
+    q = rng.normal(size=(9, 16)).astype(np.float32)
+    docs = rng.normal(size=(230, 16)).astype(np.float32)
+    return q, docs
+
+
+def test_driver_w1_matches_argsort_oracle(synth):
+    """A single-worker driver is exactly brute-force top-k."""
+    q, docs = synth
+    driver = ShardedSearchDriver(score_impl="numpy", chunk_size=37)
+    vals, pos = driver.search(q, docs.shape[0], _load_from(docs), 10)
+    full = q @ docs.T
+    oracle_pos = np.argsort(-full, axis=1, kind="stable")[:, :10]
+    np.testing.assert_array_equal(pos, oracle_pos)
+    np.testing.assert_allclose(
+        vals, np.take_along_axis(full, oracle_pos, 1), rtol=1e-6)
+
+
+@pytest.mark.parametrize("w", (2, 4))
+def test_simulated_cluster_matches_w1(synth, w):
+    """W real drivers + in-memory all-gather == the W=1 driver, and all
+    ranks return the identical merged result."""
+    q, docs = synth
+    single = ShardedSearchDriver(score_impl="numpy", chunk_size=37)
+    ref_vals, ref_pos = single.search(q, docs.shape[0], _load_from(docs),
+                                      10)
+    cluster = SimulatedCluster(w)
+    drivers = [ShardedSearchDriver(
+        n_workers=w, worker_index=rank, sharder=cluster.sharder,
+        score_impl="numpy", chunk_size=37, gather=cluster.gather)
+        for rank in range(w)]
+    outs = cluster.run(
+        lambda rank: drivers[rank].search(q, docs.shape[0],
+                                          _load_from(docs), 10))
+    for vals, pos in outs:
+        np.testing.assert_array_equal(pos, ref_pos)
+        np.testing.assert_allclose(vals, ref_vals, rtol=1e-6)
+
+
+def test_prefetch_does_not_change_results(synth):
+    q, docs = synth
+    outs = {}
+    for prefetch in (False, True):
+        driver = ShardedSearchDriver(score_impl="numpy", chunk_size=23,
+                                     prefetch=prefetch)
+        outs[prefetch] = driver.search(q, docs.shape[0], _load_from(docs),
+                                       7)
+    np.testing.assert_array_equal(outs[True][1], outs[False][1])
+    np.testing.assert_array_equal(outs[True][0], outs[False][0])
+
+
+def test_prefetch_loads_every_chunk_once_in_order(synth):
+    q, docs = synth
+    calls = []
+
+    def loader(lo, hi):
+        calls.append((lo, hi))
+        return docs[lo:hi]
+
+    driver = ShardedSearchDriver(score_impl="numpy", chunk_size=50)
+    driver.search(q, docs.shape[0], loader, 5)
+    assert calls == [(0, 50), (50, 100), (100, 150), (150, 200),
+                     (200, 230)]
+    assert driver.stats["chunks"] == 5
+    assert driver.stats["items"] == 230
+
+
+def test_cluster_with_fewer_docs_than_workers(synth):
+    """total_items < n_workers: empty shards are legal and the merged
+    result still matches W=1 (FairSharder regression)."""
+    q, docs = synth
+    docs = docs[:3]
+    single = ShardedSearchDriver(score_impl="numpy", chunk_size=8)
+    ref_vals, ref_pos = single.search(q, 3, _load_from(docs), 5)
+    cluster = SimulatedCluster(4)
+    drivers = [ShardedSearchDriver(
+        n_workers=4, worker_index=rank, sharder=cluster.sharder,
+        score_impl="numpy", chunk_size=8, gather=cluster.gather)
+        for rank in range(4)]
+    outs = cluster.run(
+        lambda rank: drivers[rank].search(q, 3, _load_from(docs), 5))
+    for vals, pos in outs:
+        np.testing.assert_array_equal(pos, ref_pos)
+        # rtol 1e-5: BLAS low-bit drift between a 3-doc GEMM (W=1) and
+        # the single-row dots the 1-doc shards take
+        np.testing.assert_allclose(vals, ref_vals, rtol=1e-5)
+    # k=5 > 3 docs: the tail must be empty, not garbage
+    assert (ref_pos[:, 3:] == -1).all()
+
+
+def test_cluster_propagates_worker_errors():
+    cluster = SimulatedCluster(3)
+
+    def worker(rank):
+        if rank == 1:
+            raise ValueError("boom on rank 1")
+        # healthy ranks block in the gather and must not deadlock when
+        # rank 1 aborts the barrier
+        from repro.core.result_heap import FastResultHeapq
+        return cluster.gather.merge(FastResultHeapq(2, 3), rank)
+
+    with pytest.raises(ValueError, match="boom on rank 1"):
+        cluster.run(worker)
+
+
+def test_round_stable_bounds_under_staggered_updates():
+    """A worker reporting its round must not move the shard bounds other
+    workers of the same round still have to read (the EMA commits only
+    once the whole round has reported)."""
+    from repro.core.fair_sharding import FairSharder
+    s = FairSharder(2)
+    before = s.bounds(1000)
+    s.update(0, 500, 0.1)                     # rank 0 finishes first
+    assert s.bounds(1000) == before           # rank 1 must see the same
+    s.update(1, 500, 10.0)                    # round complete -> commit
+    after = s.bounds(1000)
+    assert after != before                    # now the EMA has moved
+    assert after[0][1] - after[0][0] > after[1][1] - after[1][0]
+
+
+# -- evaluator-level equivalence matrix (real encoder) ------------------------
+
+
+@pytest.fixture(scope="module")
+def cluster_env(tiny_retriever, tiny_params, retrieval_data,
+                tmp_path_factory):
+    """Seed single-process numpy reference + a shared warm cache."""
+    coll = RetrievalCollator(DataArguments(vocab_size=257),
+                             HashTokenizer(257))
+    cache = EmbeddingCache(str(tmp_path_factory.mktemp("mncache") / "c"),
+                           dim=32)
+
+    def make(score_impl, rank=0, world=1, gather=None, sharder=None):
+        # encode_batch_size=20: ragged last chunk for every shard split
+        return RetrievalEvaluator(
+            EvaluationArguments(topk=10, encode_batch_size=20,
+                                score_impl=score_impl,
+                                metrics=("ndcg@10", "recall@10")),
+            tiny_retriever, coll, tiny_params,
+            process_index=rank, process_count=world,
+            gather=gather, sharder=sharder)
+
+    ref = make("numpy")
+    queries, corpus = retrieval_data["queries"], retrieval_data["corpus"]
+    ref.search(queries, corpus, cache=cache)        # warm the cache
+    run = ref.search(queries, corpus, cache=cache)  # warm-regime reference
+    qrels_h = {
+        stable_id_hash(q): {stable_id_hash(d): float(g)
+                            for d, g in docs.items()}
+        for q, docs in retrieval_data["qrels"].items()}
+
+    def metrics_of(q_hashes, run_ids):
+        return compute_metrics(("ndcg@10", "recall@10"), run_ids,
+                               q_hashes, qrels_h)
+
+    return {"make": make, "cache": cache, "run": run,
+            "metrics": metrics_of(run[0], run[1]),
+            "metrics_of": metrics_of}
+
+
+def _cluster_search(env, score_impl, world, queries, corpus, caches):
+    """All ranks' (q_hashes, ids, scores) from a W-worker simulated
+    cluster search."""
+    if world == 1:
+        ev = env["make"](score_impl)
+        return [ev.search(queries, corpus, cache=caches[0])]
+    cluster = SimulatedCluster(world)
+    evs = [env["make"](score_impl, rank, world, cluster.gather,
+                       cluster.sharder) for rank in range(world)]
+    return cluster.run(
+        lambda rank: evs[rank].search(queries, corpus,
+                                      cache=caches[rank]))
+
+
+@pytest.mark.parametrize("world", WORLD_SIZES)
+@pytest.mark.parametrize("score_impl", SCORE_IMPLS)
+def test_matrix_matches_seed_numpy_path(cluster_env, retrieval_data,
+                                        score_impl, world):
+    """score_impl × W simulated workers == the seed single-process numpy
+    rankings (bitwise ids, allclose scores) and identical metrics, with
+    the shared warm cache."""
+    queries, corpus = retrieval_data["queries"], retrieval_data["corpus"]
+    outs = _cluster_search(cluster_env, score_impl, world, queries, corpus,
+                           [cluster_env["cache"]] * world)
+    rqh, rids, rvals = cluster_env["run"]
+    for qh, ids, vals in outs:          # every rank: identical result
+        np.testing.assert_array_equal(qh, rqh)
+        np.testing.assert_array_equal(ids, rids)
+        np.testing.assert_allclose(vals, rvals, rtol=1e-5, atol=1e-6)
+        metrics = cluster_env["metrics_of"](qh, ids)
+        for name, want in cluster_env["metrics"].items():
+            assert abs(metrics[name] - want) < 1e-9, name
+
+
+@pytest.mark.parametrize("score_impl", ("numpy", "jax"))
+def test_matrix_cold_cache(cluster_env, retrieval_data, tmp_path,
+                           score_impl):
+    """Cold per-worker caches (each node encodes its own shard, as on a
+    real cluster): rankings still match W=1 with a cold cache, and the
+    worker caches jointly cover the corpus exactly once."""
+    queries, corpus = retrieval_data["queries"], retrieval_data["corpus"]
+    ref_cache = EmbeddingCache(str(tmp_path / "w1"), dim=32)
+    (ref,) = _cluster_search(cluster_env, score_impl, 1, queries, corpus,
+                             [ref_cache])
+    caches = [EmbeddingCache(str(tmp_path / f"w2_{r}"), dim=32)
+              for r in range(2)]
+    outs = _cluster_search(cluster_env, score_impl, 2, queries, corpus,
+                           caches)
+    for qh, ids, vals in outs:
+        np.testing.assert_array_equal(ids, ref[1])
+        np.testing.assert_allclose(vals, ref[2], rtol=1e-5, atol=1e-6)
+    assert sum(len(c) for c in caches) == len(corpus)
+
+
+def test_shared_cold_cache_is_thread_safe(cluster_env, retrieval_data,
+                                          tmp_path):
+    """Workers of one simulated node may share one cache directory: the
+    locked append path keeps the id index consistent with the vector
+    file (every corpus id lands exactly once and is readable), and warm
+    passes over the shared cache are deterministic."""
+    queries, corpus = retrieval_data["queries"], retrieval_data["corpus"]
+    cache = EmbeddingCache(str(tmp_path / "shared"), dim=32)
+    _cluster_search(cluster_env, "jax", 2, queries, corpus, [cache] * 2)
+    assert len(cache) == len(corpus)           # disjoint shards, no dupes
+    assert cache.get(list(corpus)).shape == (len(corpus), 32)
+    warm1 = _cluster_search(cluster_env, "jax", 2, queries, corpus,
+                            [cache] * 2)
+    warm2 = _cluster_search(cluster_env, "jax", 2, queries, corpus,
+                            [cache] * 2)
+    np.testing.assert_array_equal(warm1[0][1], warm2[0][1])
+    np.testing.assert_array_equal(warm1[0][2], warm2[0][2])
