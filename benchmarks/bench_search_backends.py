@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_call
-from repro.core.evaluator import SCORE_BACKENDS
+from repro.core.sharded_search import SCORE_BACKENDS
 from repro.core.result_heap import FastResultHeapq
 
 

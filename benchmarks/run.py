@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §7 index):
   Table 4  time-to-first-sample, first vs warm run
   kernels  fused score+top-k HBM-traffic reduction
   search   score_impl backends: host-numpy baseline vs device paths
+  multinode  ShardedSearchDriver scaling W=1,2,4 (+ results/*.json)
 """
 
 import os
@@ -18,15 +19,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (bench_kernels, bench_memory, bench_result_heap,
-                            bench_scaling, bench_search_backends,
-                            bench_ttfs)
+    from benchmarks import (bench_kernels, bench_memory, bench_multinode,
+                            bench_result_heap, bench_scaling,
+                            bench_search_backends, bench_ttfs)
     bench_result_heap.run()
     bench_scaling.run()
     bench_ttfs.run()
     bench_memory.run()
     bench_kernels.run()
     bench_search_backends.run()
+    bench_multinode.run()
 
 
 if __name__ == "__main__":

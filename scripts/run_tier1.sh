@@ -1,0 +1,12 @@
+#!/usr/bin/env bash
+# Tier-1 gate: fail fast on the quick suite, then run the full tier-1
+# command from ROADMAP.md.  Usage: scripts/run_tier1.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 (fast inner loop: -m 'not slow') =="
+python -m pytest -x -q -m "not slow" "$@"
+
+echo "== tier-1 (full suite) =="
+python -m pytest -x -q "$@"

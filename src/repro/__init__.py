@@ -25,6 +25,9 @@ _EXPORTS = {
     "IRMetrics": "repro.core.metrics",
     "compute_metrics": "repro.core.metrics",
     "FastResultHeapq": "repro.core.result_heap",
+    "FairSharder": "repro.core.fair_sharding",
+    "ShardedSearchDriver": "repro.core.sharded_search",
+    "SimulatedCluster": "repro.launch.distributed",
     "register_loader": "repro.data.loaders",
     "HashTokenizer": "repro.data.tokenizer",
     "DefaultEncoder": "repro.models.encoder",

@@ -71,6 +71,10 @@ class EvaluationArguments:
     # score matrix never exists in HBM (interpret-mode on CPU, Mosaic on
     # TPU).
     score_impl: str = "jax"              # numpy | jax | pallas_fused
+    # Double-buffered chunk pipeline (ShardedSearchDriver): chunk i+1's
+    # cache-read/encode/h2d overlaps chunk i's scoring.  Same results
+    # either way (chunks are scored in order); off = fully synchronous.
+    async_prefetch: bool = True
 
 
 def parse_cli(*arg_classes, argv: Sequence[str] | None = None):

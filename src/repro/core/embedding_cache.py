@@ -3,12 +3,20 @@
 ``cache_records(ids, vectors)`` appends; vectors are served from an
 ``np.memmap`` so only requested rows are faulted in.  Writes are atomic
 (tmp files + os.replace of the index) and append-safe across sessions.
+
+Thread-safety: one instance may be shared by the sharded search driver's
+prefetch thread and by simulated-cluster worker threads — appends are
+serialized under a lock (vector bytes land in file order matching the id
+index) and reads snapshot the (index, perm, mmap) triple under the same
+lock, so a concurrent append can never mix old row mappings with a new
+mmap.
 """
 
 from __future__ import annotations
 
 import json
 import os
+import threading
 
 import numpy as np
 
@@ -27,6 +35,7 @@ class EmbeddingCache:
         self._ids = np.empty(0, np.int64)
         self._sorted = None
         self._mmap = None
+        self._lock = threading.RLock()
         self._load()
 
     def _load(self):
@@ -54,33 +63,39 @@ class EmbeddingCache:
         assert vectors.shape[1] == self.dim
         hashes = stable_id_hash_array(ids)
         assert len(hashes) == len(vectors)
-        with open(self._vec_path, "ab") as f:
-            f.write(vectors.tobytes())
-        new_ids = np.concatenate([np.asarray(self._ids), hashes])
-        tmp = self._ids_path + ".tmp.npy"
-        np.save(tmp, new_ids)
-        os.replace(tmp, self._ids_path)
-        tmp_meta = self._meta_path + ".tmp"
-        with open(tmp_meta, "w") as f:
-            json.dump({"dim": self.dim, "dtype": self.dtype.name,
-                       "n": len(new_ids)}, f)
-        os.replace(tmp_meta, self._meta_path)
-        self._ids = new_ids
-        self._refresh_mmap()
+        with self._lock:
+            with open(self._vec_path, "ab") as f:
+                f.write(vectors.tobytes())
+            new_ids = np.concatenate([np.asarray(self._ids), hashes])
+            tmp = self._ids_path + ".tmp.npy"
+            np.save(tmp, new_ids)
+            os.replace(tmp, self._ids_path)
+            tmp_meta = self._meta_path + ".tmp"
+            with open(tmp_meta, "w") as f:
+                json.dump({"dim": self.dim, "dtype": self.dtype.name,
+                           "n": len(new_ids)}, f)
+            os.replace(tmp_meta, self._meta_path)
+            self._ids = new_ids
+            self._refresh_mmap()
 
     # -- read -------------------------------------------------------------------
-    def _ensure_sorted(self):
-        if self._sorted is None:
-            ids = np.asarray(self._ids)
-            self._perm = np.argsort(ids, kind="stable")
-            self._sorted = ids[self._perm]
+    def _index(self):
+        """Consistent (sorted_ids, perm, mmap) snapshot (see module doc)."""
+        with self._lock:
+            if self._sorted is None:
+                ids = np.asarray(self._ids)
+                self._perm = np.argsort(ids, kind="stable")
+                self._sorted = ids[self._perm]
+            return self._sorted, self._perm, self._mmap
 
-    def _rows_for(self, hashes: np.ndarray) -> np.ndarray:
-        self._ensure_sorted()
-        pos = np.searchsorted(self._sorted, hashes)
-        pos = np.clip(pos, 0, len(self._sorted) - 1)
-        ok = self._sorted[pos] == hashes
-        rows = np.where(ok, self._perm[pos], -1)
+    def _rows_for(self, hashes: np.ndarray,
+                  sorted_ids=None, perm=None) -> np.ndarray:
+        if sorted_ids is None:
+            sorted_ids, perm, _ = self._index()
+        pos = np.searchsorted(sorted_ids, hashes)
+        pos = np.clip(pos, 0, len(sorted_ids) - 1)
+        ok = sorted_ids[pos] == hashes
+        rows = np.where(ok, perm[pos], -1)
         return rows
 
     def __contains__(self, raw_id) -> bool:
@@ -98,10 +113,11 @@ class EmbeddingCache:
         """Lazy fetch: only the requested rows are read from disk."""
         if not len(self._ids):
             raise KeyError(f"{len(ids)} ids not cached (cache empty)")
-        rows = self._rows_for(stable_id_hash_array(ids))
+        sorted_ids, perm, mmap = self._index()
+        rows = self._rows_for(stable_id_hash_array(ids), sorted_ids, perm)
         if (rows < 0).any():
             raise KeyError(f"{(rows < 0).sum()} ids not cached")
-        return np.asarray(self._mmap[rows])
+        return np.asarray(mmap[rows])
 
     def get_one(self, raw_id) -> np.ndarray:
         return self.get([raw_id])[0]

@@ -1,21 +1,20 @@
 """RetrievalEvaluator: unified evaluation + hard-negative mining (§3.5).
 
-One interface, three scales, zero code changes:
-  * single device — loops corpus chunks through ``encode`` + FastResultHeapq
+One interface, three scales, zero code changes — all three are thin
+single-worker instantiations of
+:class:`repro.core.sharded_search.ShardedSearchDriver`:
+
+  * single device — one driver (W=1) streams corpus chunks through
+    ``encode`` + FastResultHeapq with double-buffered async prefetch
   * multi-device  — corpus chunks sharded over the mesh's data axes by pjit
-  * multi-node    — each process takes a fair-sharded corpus slice; local
-    top-k states are merged (an O(Q*k) reduction, not O(Q*N))
+  * multi-node    — each process runs its driver over a fair-sharded
+    corpus slice; local top-k states reduce through a ``ShardGather``
+    transport (an O(Q*k*W) reduction, not O(Q*N))
 
-Scoring is a pluggable backend (``EvaluationArguments.score_impl``), all
-returning identical rankings:
-
-  * ``numpy``        — host ``q_emb @ embs.T`` (the paper-era baseline)
-  * ``jax``          — jit'd device matmul; query embeddings stay device-
-    resident and score chunks feed the heap without a host round-trip
-  * ``pallas_fused`` — ``kernels.ops.fused_score_topk`` reduces each
-    corpus chunk to (Q, k) *inside* the kernel, so the (Q, C) score
-    matrix never materializes on host or in HBM; per-chunk results merge
-    via ``FastResultHeapq.merge_arrays``
+Scoring is a pluggable backend (``EvaluationArguments.score_impl``, see
+``sharded_search.SCORE_BACKENDS``), all returning identical rankings:
+``numpy`` (host baseline), ``jax`` (device matmul), ``pallas_fused``
+(in-kernel score+top-k; the (Q, C) score matrix never materializes).
 
 Embedding caching: encoded chunks are written to the mmap'd
 EmbeddingCache; subsequent calls stream cached vectors (paper Table 3
@@ -24,7 +23,6 @@ EmbeddingCache; subsequent calls stream cached vectors (paper Table 3
 
 from __future__ import annotations
 
-import time
 from typing import Callable, Iterable, Sequence
 
 import jax
@@ -35,57 +33,10 @@ from repro.core.config import EvaluationArguments
 from repro.core.embedding_cache import EmbeddingCache
 from repro.core.fair_sharding import FairSharder
 from repro.core.metrics import compute_metrics
-from repro.core.result_heap import FastResultHeapq
+from repro.core.sharded_search import (  # noqa: F401 — re-exported API
+    SCORE_BACKENDS, MergeFnGather, ProcessAllGather, ShardedSearchDriver,
+    get_score_backend)
 from repro.data.table import stable_id_hash, stable_id_hash_array
-
-
-# -- score backends -----------------------------------------------------------
-#
-# A backend folds one corpus-embedding chunk into the running heap:
-#   backend(q_emb, chunk_embs, id_offset, heap, k)
-# where id_offset is the chunk's global corpus position (int32 positions
-# on device; the host maps positions back to 63-bit id hashes).
-
-_matmul_jit = jax.jit(lambda q, d: q @ d.T)
-
-
-def _score_numpy(q_emb, embs, id_offset: int, heap: FastResultHeapq,
-                 k: int) -> None:
-    positions = np.arange(id_offset, id_offset + embs.shape[0],
-                          dtype=np.int32)
-    heap.update(np.asarray(q_emb) @ np.asarray(embs).T, positions)
-
-
-def _score_jax(q_emb, embs, id_offset: int, heap: FastResultHeapq,
-               k: int) -> None:
-    scores = _matmul_jit(jnp.asarray(q_emb), jnp.asarray(embs))
-    positions = jnp.arange(id_offset, id_offset + embs.shape[0],
-                           dtype=jnp.int32)
-    heap.update(scores, positions)
-
-
-def _score_pallas_fused(q_emb, embs, id_offset: int, heap: FastResultHeapq,
-                        k: int) -> None:
-    from repro.kernels import ops as kops
-    vals, ids = kops.fused_score_topk(jnp.asarray(q_emb), jnp.asarray(embs),
-                                      k, id_offset=id_offset)
-    heap.merge_arrays(vals, ids)
-
-
-SCORE_BACKENDS: dict[str, Callable] = {
-    "numpy": _score_numpy,
-    "jax": _score_jax,
-    "pallas_fused": _score_pallas_fused,
-}
-
-
-def get_score_backend(name: str) -> Callable:
-    try:
-        return SCORE_BACKENDS[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown score_impl {name!r}; expected one of "
-            f"{sorted(SCORE_BACKENDS)}") from None
 
 
 class RetrievalEvaluator:
@@ -93,7 +44,8 @@ class RetrievalEvaluator:
                  params, mesh=None,
                  process_index: int | None = None,
                  process_count: int | None = None,
-                 shard_merge_fn: Callable | None = None):
+                 shard_merge_fn: Callable | None = None,
+                 gather=None, sharder: FairSharder | None = None):
         self.args = args
         self.retriever = retriever
         self.collator = collator
@@ -103,8 +55,20 @@ class RetrievalEvaluator:
                               else process_index)
         self.process_count = (jax.process_count() if process_count is None
                               else process_count)
-        self.sharder = FairSharder(self.process_count)
-        self._shard_merge_fn = shard_merge_fn
+        # pass a shared FairSharder (e.g. SimulatedCluster.sharder) so all
+        # workers of one cluster see the same throughput-EMA state
+        self.sharder = (FairSharder(self.process_count) if sharder is None
+                        else sharder)
+        # shard-state transport, precedence: explicit merge fn (legacy
+        # test injection) > explicit gather > jax.distributed allgather
+        if shard_merge_fn is not None:
+            self.gather = MergeFnGather(shard_merge_fn)
+        elif gather is not None:
+            self.gather = gather
+        elif self.process_count > 1:
+            self.gather = ProcessAllGather()
+        else:
+            self.gather = None
         self._encode_jit = jax.jit(
             lambda p, b: self.retriever.encoder.encode(p, b))
         # (corpus_obj, key list, int64 hash array): corpora are hashed
@@ -186,48 +150,32 @@ class RetrievalEvaluator:
         default — 63-bit hashes would truncate on device).
         """
         topk = topk or self.args.topk
-        backend = get_score_backend(self.args.score_impl)
         on_device = self.args.score_impl != "numpy"
         q_ids = list(queries.keys())
         q_emb = self._encode_texts([queries[q] for q in q_ids], True,
                                    device=on_device)
-        heap = FastResultHeapq(len(q_ids), topk, impl=self.args.heap_impl)
-
         c_ids = list(corpus.keys())
-        # fair multi-node sharding of the corpus (paper: same script,
-        # any number of nodes)
-        lo, hi = self.sharder.bounds(len(c_ids))[self.process_index]
-        my_ids = c_ids[lo:hi]
-        bs = self.args.encode_batch_size
-        t0 = time.monotonic()
-        for off in range(0, len(my_ids), bs):
-            chunk_ids = my_ids[off: off + bs]
-            embs = self.encode_corpus(
+
+        def load_chunk(lo: int, hi: int):
+            chunk_ids = c_ids[lo:hi]
+            return self.encode_corpus(
                 chunk_ids, [corpus[c] for c in chunk_ids], cache,
                 device=on_device)
-            backend(q_emb, embs, lo + off, heap, topk)
-        self.sharder.update(self.process_index, len(my_ids),
-                            time.monotonic() - t0)
-        heap = self._merge_shards(heap)
-        vals, pos = heap.finalize()
+
+        # the evaluator is a thin instantiation of the sharded driver:
+        # same code path for 1 process or W (paper: same script, any
+        # number of nodes)
+        driver = ShardedSearchDriver(
+            n_workers=self.process_count, worker_index=self.process_index,
+            sharder=self.sharder, score_impl=self.args.score_impl,
+            heap_impl=self.args.heap_impl,
+            chunk_size=self.args.encode_batch_size,
+            prefetch=self.args.async_prefetch, gather=self.gather)
+        vals, pos = driver.search(q_emb, len(c_ids), load_chunk, topk)
         all_hashes = self._corpus_hashes(corpus)
         ids = np.where(pos >= 0, all_hashes[np.clip(pos, 0, None)], -1)
         q_hashes = stable_id_hash_array(q_ids)
         return q_hashes, ids, vals
-
-    def _merge_shards(self, heap: FastResultHeapq) -> FastResultHeapq:
-        if self.process_count <= 1:
-            return heap
-        if self._shard_merge_fn is not None:   # injected transport (tests
-            return self._shard_merge_fn(heap)  # simulate multi-node)
-        from jax.experimental import multihost_utils
-        vals, ids = heap.finalize()
-        all_v = multihost_utils.process_allgather(jnp.asarray(vals))
-        all_i = multihost_utils.process_allgather(jnp.asarray(ids))
-        merged = FastResultHeapq(vals.shape[0], heap.k, impl="jax")
-        for p in range(all_v.shape[0]):
-            merged.merge_arrays(all_v[p], all_i[p])
-        return merged
 
     # -- public API ---------------------------------------------------------------
     def evaluate(self, queries: dict[str, str], corpus: dict[str, str],

@@ -5,9 +5,26 @@ the fast ones under equal sharding.  ``FairSharder`` keeps an EMA of
 per-worker throughput and splits each round's items proportionally, so all
 workers finish together.  Also used for straggler mitigation: a slow
 worker's share shrinks on the next round.
+
+The EMA commits **per round**: ``update`` buffers observations and only
+folds them into the EMA once every worker has reported the round.  Shard
+bounds therefore stay frozen while a round is in flight — essential when
+one sharder instance is shared by W workers (``SimulatedCluster``,
+``ShardedSearchDriver``) that partition at different wall-clock times;
+an immediately-applied EMA would hand late-partitioning workers
+*different* bounds than early ones, silently overlapping or dropping
+corpus slices.
+
+On a real cluster each process holds its own replica and only observes
+its own rank, so the search driver exchanges observations through the
+gather transport (``ProcessAllGather.exchange_observations``) — every
+replica then commits the identical complete round and all processes
+keep computing identical bounds.
 """
 
 from __future__ import annotations
+
+import threading
 
 import numpy as np
 
@@ -19,15 +36,36 @@ class FairSharder:
         self.alpha = alpha
         self.min_share = min_share
         self.throughput = np.ones(n_workers, np.float64)
+        # round-buffered observations: worker -> items/s (None = reported
+        # with no timing signal, e.g. an empty shard)
+        self._pending: dict[int, float | None] = {}
+        self._lock = threading.Lock()
 
     def shares(self, total_items: int) -> list[int]:
-        w = np.maximum(self.throughput, 1e-9)
+        """Split ``total_items`` proportionally to throughput.
+
+        Invariants: shares are non-negative and sum to ``total_items``
+        exactly; since ``frac`` is normalized, the floor() pass leaves a
+        remainder in ``[0, n]`` (``n`` only reachable through float
+        round-off in the normalization) which goes to the fastest
+        workers, one item each.  ``total_items < n`` is legal: most
+        floors are 0 and the remainder pass hands single items to the
+        fastest workers, leaving the rest with empty (contiguous)
+        bounds.
+        """
+        assert total_items >= 0, total_items
+        with self._lock:
+            w = np.maximum(self.throughput, 1e-9)
         frac = np.maximum(w / w.sum(), self.min_share)
         frac = frac / frac.sum()
         sizes = np.floor(frac * total_items).astype(int)
-        # distribute the remainder to the fastest workers
-        rem = total_items - sizes.sum()
-        order = np.argsort(-w)
+        rem = int(total_items - sizes.sum())
+        # a remainder beyond n means frac was not normalized — the old
+        # `order[i % n]` round-robin would silently paper over that
+        assert 0 <= rem <= self.n, (
+            f"floor remainder {rem} outside [0, {self.n}] "
+            f"(total_items={total_items}, frac sum={frac.sum()!r})")
+        order = np.argsort(-w, kind="stable")
         for i in range(rem):
             sizes[order[i % self.n]] += 1
         return sizes.tolist()
@@ -39,8 +77,25 @@ class FairSharder:
         return list(zip(starts.tolist(), ends.tolist()))
 
     def update(self, worker: int, items: int, seconds: float):
-        if seconds <= 0 or items <= 0:
-            return
-        obs = items / seconds
-        self.throughput[worker] = (
-            self.alpha * obs + (1 - self.alpha) * self.throughput[worker])
+        """Report one worker's round observation.
+
+        The observation is buffered; once all ``n`` workers have
+        reported the round, every buffered observation folds into the
+        EMA atomically and the round resets.  (With ``n == 1`` this is
+        an immediate update.)  A worker with an empty shard reports with
+        ``items == 0`` and counts toward round completion without moving
+        its EMA.
+        """
+        with self._lock:
+            if items > 0 and seconds > 0:
+                self._pending[worker] = items / seconds
+            else:
+                self._pending.setdefault(worker, None)
+            if len(self._pending) < self.n:
+                return
+            for wk, obs in self._pending.items():
+                if obs is not None:
+                    self.throughput[wk] = (
+                        self.alpha * obs
+                        + (1 - self.alpha) * self.throughput[wk])
+            self._pending.clear()

@@ -26,6 +26,9 @@ NEG_INF = jnp.float32(-jnp.inf)
 
 @partial(jax.jit, static_argnames=("k",), donate_argnums=(0, 1))
 def _update_jax(vals, ids, scores, chunk_ids, k: int):
+    # NaN scores mean "never retrieve" (see class docstring): sanitize to
+    # -inf so lax.top_k's NaN ordering can't differ from the other impls
+    scores = jnp.where(jnp.isnan(scores), NEG_INF, scores)
     cand_v = jnp.concatenate([vals, scores.astype(jnp.float32)], axis=1)
     cand_i = jnp.concatenate(
         [ids, jnp.broadcast_to(chunk_ids[None, :],
@@ -42,6 +45,13 @@ class FastResultHeapq:
     callers map positions back to raw/hashed ids on the host.  (JAX
     defaults to 32-bit — storing 63-bit id hashes on device would
     silently truncate.)
+
+    NaN and -inf scores are defined to mean "never retrieve": such
+    candidates never surface a doc id, in any impl.  (NaN: Python
+    float/tuple comparisons and lax.top_k order NaN differently; -inf:
+    the device impls can't distinguish a real -inf candidate from an
+    empty -inf/-1 buffer slot, so the python impl drops them too —
+    without this the impls would diverge on under-filled heaps.)
     """
 
     def __init__(self, n_queries: int, k: int, impl: str = "jax"):
@@ -63,7 +73,10 @@ class FastResultHeapq:
             for q in range(self.n_queries):
                 h = self._heaps[q]
                 for c in range(s.shape[1]):
-                    item = (float(s[q, c]), int(cid[c]))
+                    sc = float(s[q, c])
+                    if sc != sc or sc == -np.inf:    # never retrieve
+                        continue
+                    item = (sc, int(cid[c]))
                     if len(h) < self.k:
                         heapq.heappush(h, item)
                     elif item > h[0]:
@@ -71,9 +84,10 @@ class FastResultHeapq:
             return
         if self.impl == "pallas":
             from repro.kernels import ops as kops
+            scores = jnp.asarray(scores)
+            scores = jnp.where(jnp.isnan(scores), NEG_INF, scores)
             self.vals, self.ids = kops.topk_update(
-                self.vals, self.ids, jnp.asarray(scores),
-                jnp.asarray(chunk_ids))
+                self.vals, self.ids, scores, jnp.asarray(chunk_ids))
             return
         self.vals, self.ids = _update_jax(
             self.vals, self.ids, jnp.asarray(scores),
@@ -93,16 +107,18 @@ class FastResultHeapq:
             for q in range(self.n_queries):
                 h = self._heaps[q]
                 for c in range(v.shape[1]):
-                    if i[q, c] < 0:
+                    sc = float(v[q, c])
+                    if i[q, c] < 0 or sc != sc or sc == -np.inf:
                         continue
-                    item = (float(v[q, c]), int(i[q, c]))
+                    item = (sc, int(i[q, c]))
                     if len(h) < self.k:
                         heapq.heappush(h, item)
                     elif item > h[0]:
                         heapq.heapreplace(h, item)
             return
-        cand_v = jnp.concatenate(
-            [self.vals, jnp.asarray(vals, jnp.float32)], axis=1)
+        vals = jnp.asarray(vals, jnp.float32)
+        vals = jnp.where(jnp.isnan(vals), NEG_INF, vals)
+        cand_v = jnp.concatenate([self.vals, vals], axis=1)
         cand_i = jnp.concatenate(
             [self.ids, jnp.asarray(ids).astype(self.ids.dtype)], axis=1)
         top_v, pos = jax.lax.top_k(cand_v, self.k)

@@ -1,0 +1,263 @@
+"""ShardedSearchDriver: the multi-node search engine (paper §3.5).
+
+The paper's claim — "the same script runs on any number of nodes, and
+inference time decreases linearly with the number of available nodes" —
+is implemented here as a coordinator/worker driver that every search
+entry point (``RetrievalEvaluator.search``, ``mine_hard_negatives``,
+``launch.serve``, ``benchmarks.bench_multinode``) instantiates:
+
+  * **partition** — the coordinator splits ``[0, n_docs)`` across workers
+    with :class:`~repro.core.fair_sharding.FairSharder` (throughput EMA,
+    updated after every round, so stragglers shrink next round);
+  * **stream**    — each worker pulls its slice in ``chunk_size`` chunks
+    through a caller-supplied ``load_chunk(lo, hi)`` (cache read / encode
+    / h2d) with **double-buffered async prefetch**: chunk ``i+1``'s load
+    overlaps chunk ``i``'s scoring on the worker's main thread;
+  * **score**     — a pluggable backend (``SCORE_BACKENDS``) folds each
+    chunk into a local :class:`FastResultHeapq` (Q, k) state;
+  * **reduce**    — per-worker states merge through a
+    :class:`ShardGather` transport via ``FastResultHeapq.merge_arrays``:
+    an ``O(Q·k·W)`` reduction, never ``O(Q·N)``.
+
+Transports: :class:`ProcessAllGather` (real multi-node via
+``jax.distributed``) and ``repro.launch.distributed.InMemoryAllGather``
+(W real drivers in one process — tests/benchmarks) are interchangeable;
+all of them merge rank states in rank order, so every worker computes an
+identical merged ranking.
+"""
+
+from __future__ import annotations
+
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fair_sharding import FairSharder
+from repro.core.result_heap import FastResultHeapq
+
+# -- score backends -----------------------------------------------------------
+#
+# A backend folds one corpus-embedding chunk into the running heap:
+#   backend(q_emb, chunk_embs, id_offset, heap, k)
+# where id_offset is the chunk's global corpus position (int32 positions
+# on device; the host maps positions back to 63-bit id hashes).
+
+_matmul_jit = jax.jit(lambda q, d: q @ d.T)
+
+
+def _score_numpy(q_emb, embs, id_offset: int, heap: FastResultHeapq,
+                 k: int) -> None:
+    positions = np.arange(id_offset, id_offset + embs.shape[0],
+                          dtype=np.int32)
+    heap.update(np.asarray(q_emb) @ np.asarray(embs).T, positions)
+
+
+def _score_jax(q_emb, embs, id_offset: int, heap: FastResultHeapq,
+               k: int) -> None:
+    scores = _matmul_jit(jnp.asarray(q_emb), jnp.asarray(embs))
+    positions = jnp.arange(id_offset, id_offset + embs.shape[0],
+                           dtype=jnp.int32)
+    heap.update(scores, positions)
+
+
+def _score_pallas_fused(q_emb, embs, id_offset: int, heap: FastResultHeapq,
+                        k: int) -> None:
+    from repro.kernels import ops as kops
+    vals, ids = kops.fused_score_topk(jnp.asarray(q_emb), jnp.asarray(embs),
+                                      k, id_offset=id_offset)
+    heap.merge_arrays(vals, ids)
+
+
+SCORE_BACKENDS: dict[str, Callable] = {
+    "numpy": _score_numpy,
+    "jax": _score_jax,
+    "pallas_fused": _score_pallas_fused,
+}
+
+
+def get_score_backend(name: str) -> Callable:
+    try:
+        return SCORE_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown score_impl {name!r}; expected one of "
+            f"{sorted(SCORE_BACKENDS)}") from None
+
+
+# -- shard-state transports ---------------------------------------------------
+
+
+@runtime_checkable
+class ShardGather(Protocol):
+    """Reduces per-worker (Q, k) heap states to one merged state.
+
+    ``merge`` must return the *same* merged ranking on every worker
+    (allgather semantics), and must merge rank states in rank order so
+    tie-breaking is deterministic across transports.
+    """
+
+    def merge(self, heap: FastResultHeapq,
+              worker_index: int) -> FastResultHeapq: ...
+
+
+class ProcessAllGather:
+    """Real multi-node transport over ``jax.distributed``.
+
+    Every process contributes its local (Q, k) state through
+    ``multihost_utils.process_allgather``; each then merges all W states
+    in rank order — the O(Q·k·W) cross-node reduction.  The merged heap
+    keeps the local heap's impl so this transport is interchangeable
+    with ``launch.distributed.InMemoryAllGather``.
+    """
+
+    def merge(self, heap: FastResultHeapq,
+              worker_index: int) -> FastResultHeapq:
+        from jax.experimental import multihost_utils
+        vals, ids = heap.finalize()
+        all_v = np.asarray(
+            multihost_utils.process_allgather(jnp.asarray(vals)))
+        all_i = np.asarray(
+            multihost_utils.process_allgather(jnp.asarray(ids)))
+        merged = FastResultHeapq(vals.shape[0], heap.k, impl=heap.impl)
+        for p in range(all_v.shape[0]):
+            merged.merge_arrays(all_v[p], all_i[p])
+        return merged
+
+    def exchange_observations(self, worker_index: int, items: int,
+                              seconds: float) -> list[tuple[int, int,
+                                                            float]]:
+        """Allgather every worker's round observation so each process's
+        local ``FairSharder`` replica commits the identical round (a
+        process reporting only its own rank would leave the round
+        incomplete forever and freeze the EMA)."""
+        from jax.experimental import multihost_utils
+        mine = jnp.asarray([float(worker_index), float(items), seconds],
+                           jnp.float32)
+        everyone = np.asarray(multihost_utils.process_allgather(mine))
+        return [(int(rank), int(n), float(secs))
+                for rank, n, secs in everyone]
+
+
+class MergeFnGather:
+    """Adapter for a plain ``heap -> heap`` merge callable (the
+    evaluator's legacy ``shard_merge_fn`` injection point)."""
+
+    def __init__(self, fn: Callable[[FastResultHeapq], FastResultHeapq]):
+        self.fn = fn
+
+    def merge(self, heap: FastResultHeapq,
+              worker_index: int) -> FastResultHeapq:
+        return self.fn(heap)
+
+
+# -- the driver ---------------------------------------------------------------
+
+ChunkLoader = Callable[[int, int], "np.ndarray | jax.Array"]
+
+
+class ShardedSearchDriver:
+    """One worker's view of a W-worker sharded dense search.
+
+    Parameters
+    ----------
+    n_workers / worker_index : cluster shape and this worker's rank.
+    sharder : shared :class:`FairSharder`; pass the *same* instance to
+        all drivers of a cluster so the throughput EMA state is global.
+    score_impl / heap_impl : backend names (see ``SCORE_BACKENDS`` and
+        ``FastResultHeapq``).
+    chunk_size : corpus items per streamed chunk.
+    prefetch : double-buffer chunk loads (chunk ``i+1``'s cache-read /
+        encode / h2d overlaps chunk ``i``'s scoring).  Never changes
+        results — chunks are still scored in order — only overlap.
+    gather : :class:`ShardGather` transport; ``None`` means local-only
+        (the single-worker instantiation).
+    """
+
+    def __init__(self, *, n_workers: int = 1, worker_index: int = 0,
+                 sharder: FairSharder | None = None,
+                 score_impl: str = "jax", heap_impl: str = "jax",
+                 chunk_size: int = 32, prefetch: bool = True,
+                 gather: ShardGather | None = None):
+        if not 0 <= worker_index < n_workers:
+            raise ValueError(
+                f"worker_index {worker_index} outside [0, {n_workers})")
+        self.n_workers = n_workers
+        self.worker_index = worker_index
+        self.sharder = sharder if sharder is not None else FairSharder(
+            n_workers)
+        self.score_impl = score_impl
+        self.heap_impl = heap_impl
+        self.chunk_size = chunk_size
+        self.prefetch = prefetch
+        self.gather = gather
+        # per-round observability (bench_multinode, serve logging)
+        self.stats: dict = {}
+
+    # -- coordinator ----------------------------------------------------------
+    def partition(self, n_docs: int) -> list[tuple[int, int]]:
+        """All workers' ``[lo, hi)`` corpus bounds for this round."""
+        return self.sharder.bounds(n_docs)
+
+    # -- worker ---------------------------------------------------------------
+    def _pipelined_chunks(self, lo: int, hi: int, load_chunk: ChunkLoader):
+        """Yield ``(offset, embeddings)`` for this worker's slice.
+
+        With ``prefetch`` on, a single loader thread keeps exactly one
+        chunk in flight ahead of scoring (double buffering): while the
+        caller scores chunk ``i``, chunk ``i+1`` is being cache-read /
+        encoded / copied to device.  Loads stay serialized with each
+        other (one loader thread), so cache writes need no ordering
+        logic here.
+        """
+        bounds = [(off, min(off + self.chunk_size, hi))
+                  for off in range(lo, hi, self.chunk_size)]
+        if not self.prefetch or len(bounds) <= 1:
+            for off, end in bounds:
+                yield off, load_chunk(off, end)
+            return
+        with ThreadPoolExecutor(max_workers=1,
+                                thread_name_prefix="chunk-prefetch") as ex:
+            fut = ex.submit(load_chunk, *bounds[0])
+            for i, (off, _) in enumerate(bounds):
+                embs = fut.result()
+                if i + 1 < len(bounds):
+                    fut = ex.submit(load_chunk, *bounds[i + 1])
+                yield off, embs
+
+    def search(self, q_emb, n_docs: int, load_chunk: ChunkLoader,
+               topk: int):
+        """Run this worker's encode→score→local-top-k round, then reduce.
+
+        Returns the merged ``(scores (Q, k), positions (Q, k))`` —
+        identical on every worker when a gather transport is set.
+        Positions are global corpus offsets; ``-1`` marks empty slots.
+        """
+        n_queries = q_emb.shape[0]
+        backend = get_score_backend(self.score_impl)
+        heap = FastResultHeapq(n_queries, topk, impl=self.heap_impl)
+        lo, hi = self.partition(n_docs)[self.worker_index]
+        n_chunks = 0
+        t0 = time.monotonic()
+        for off, embs in self._pipelined_chunks(lo, hi, load_chunk):
+            backend(q_emb, embs, off, heap, topk)
+            n_chunks += 1
+        seconds = time.monotonic() - t0
+        # Report the round.  A shared sharder (SimulatedCluster) hears
+        # every worker directly; with per-process sharder replicas (real
+        # multi-node) the transport must exchange observations or no
+        # replica would ever see a complete round.
+        reports = [(self.worker_index, hi - lo, seconds)]
+        exchange = getattr(self.gather, "exchange_observations", None)
+        if self.n_workers > 1 and exchange is not None:
+            reports = exchange(self.worker_index, hi - lo, seconds)
+        for rank, items, secs in reports:
+            self.sharder.update(rank, items, secs)
+        self.stats = {"lo": lo, "hi": hi, "items": hi - lo,
+                      "chunks": n_chunks, "seconds": seconds}
+        if self.n_workers > 1 and self.gather is not None:
+            heap = self.gather.merge(heap, self.worker_index)
+        return heap.finalize()
