@@ -1,0 +1,98 @@
+"""Benchmark regression gate: fresh runs vs committed baselines.
+
+``python benchmarks/run.py --check [--tol T]`` re-runs every bench that
+records a ``results/*.json`` baseline, writing the fresh JSON into a
+scratch dir, then compares *relative* key metrics (speedups, scaling
+efficiencies, dispatch reductions — never absolute wall times, which
+track the machine not the code) against the committed file.  A
+higher-is-better metric may dip up to ``tol`` (default 0.35 — the
+tier-1 container is a noisy 2-core box) below baseline before the gate
+fails; structural metrics like dispatch counts (``EXACT_METRICS``) are
+deterministic and fail on any drop.  Exit status: 0 = all within
+tolerance, 1 = regression, 0 with a SKIP note when a baseline file was
+never committed.
+"""
+
+import argparse
+import json
+import os
+import tempfile
+
+RESULTS_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "results")
+
+
+def _dispatch_metrics(payload):
+    return {
+        "superchunk_speedup": payload["headline"]["speedup"],
+        "dispatch_reduction": payload["headline"]["dispatch_reduction"],
+    }
+
+
+def _multinode_metrics(payload):
+    eff = {r["workers"]: r["scaling_efficiency"]
+           for r in payload["scaling"]}
+    return {
+        "w4_scaling_efficiency": eff[4],
+        "chunk_pipeline_overlap": payload["chunk_pipeline"]["overlap"],
+    }
+
+
+def _run_dispatch(out_json):
+    from benchmarks import bench_dispatch
+    return bench_dispatch.run(out_json=out_json)
+
+
+def _run_multinode(out_json):
+    from benchmarks import bench_multinode
+    return bench_multinode.run(out_json=out_json)
+
+
+# baseline file -> (fresh-run fn, metric extractor).  Metrics are all
+# higher-is-better ratios.
+CHECKS = {
+    "bench_dispatch.json": (_run_dispatch, _dispatch_metrics),
+    "bench_multinode.json": (_run_multinode, _multinode_metrics),
+}
+
+# Structural metrics are deterministic functions of the code (dispatch
+# counts, not wall times): no noise allowance — any drop is a regression.
+EXACT_METRICS = {"dispatch_reduction"}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="run.py --check")
+    ap.add_argument("--check", action="store_true")  # consumed by run.py
+    ap.add_argument("--tol", type=float, default=0.35,
+                    help="allowed relative dip below baseline (0.35 = "
+                         "fresh metric may be 35%% worse)")
+    args = ap.parse_args(argv)
+
+    failures = 0
+    with tempfile.TemporaryDirectory() as scratch:
+        for fname, (run_fn, metrics_fn) in CHECKS.items():
+            base_path = os.path.join(RESULTS_DIR, fname)
+            if not os.path.exists(base_path):
+                print(f"SKIP {fname}: no committed baseline")
+                continue
+            with open(base_path) as f:
+                base = metrics_fn(json.load(f))
+            fresh = metrics_fn(run_fn(os.path.join(scratch, fname)))
+            for key, want in base.items():
+                got = fresh[key]
+                floor = (want if key in EXACT_METRICS
+                         else want * (1.0 - args.tol))
+                ok = got >= floor
+                failures += not ok
+                print(f"{'PASS' if ok else 'FAIL'} {fname}:{key} "
+                      f"fresh={got:.3f} baseline={want:.3f} "
+                      f"floor={floor:.3f}")
+    if failures:
+        print(f"bench check: {failures} metric(s) regressed")
+        return 1
+    print("bench check: all metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,3 +10,12 @@ python -m pytest -x -q -m "not slow" "$@"
 
 echo "== tier-1 (full suite) =="
 python -m pytest -x -q "$@"
+
+# Optional perf gate: re-run the JSON-recording benches and compare
+# against the committed results/*.json baselines (relative metrics,
+# tolerance for container noise).  Off by default — timing on shared CI
+# boxes is advisory; flip on with RUN_BENCH_CHECK=1.
+if [[ "${RUN_BENCH_CHECK:-0}" == "1" ]]; then
+  echo "== bench regression check (results/*.json baselines) =="
+  python benchmarks/run.py --check ${BENCH_CHECK_TOL:+--tol "$BENCH_CHECK_TOL"}
+fi

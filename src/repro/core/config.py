@@ -75,6 +75,15 @@ class EvaluationArguments:
     # cache-read/encode/h2d overlaps chunk i's scoring.  Same results
     # either way (chunks are scored in order); off = fully synchronous.
     async_prefetch: bool = True
+    # Superchunk scan executor (device score/heap backends): fold this
+    # many streamed chunks into ONE jitted lax.scan dispatch with the
+    # (Q, k) top-k state donated between steps.  0 = autotune from a
+    # warmup measurement of dispatch overhead vs per-chunk compute;
+    # 1 = disable (one dispatch per chunk); N > 1 = fixed.  Identical
+    # rankings either way — only the dispatch count changes.
+    superchunk_size: int = 0
+    # Cap on the stacked (S, C, d) superchunk tile uploaded per dispatch.
+    superchunk_max_mb: int = 64
 
 
 def parse_cli(*arg_classes, argv: Sequence[str] | None = None):

@@ -1,8 +1,16 @@
 """Memory-mapped, lazily-loaded embedding cache (paper §3.2.2).
 
 ``cache_records(ids, vectors)`` appends; vectors are served from an
-``np.memmap`` so only requested rows are faulted in.  Writes are atomic
-(tmp files + os.replace of the index) and append-safe across sessions.
+``np.memmap`` so only requested rows are faulted in.  Both the vector
+payload and the id index are **append-only** files — an append writes
+only the new rows' bytes (O(delta), not O(n): the old layout re-saved
+the full id index on every append, turning N appends into O(n²) I/O).
+Crash safety is kept via the meta file: a record batch is appended to
+``vectors.bin`` and ``ids.bin`` first, then ``meta.json`` is atomically
+replaced (tmp + ``os.replace``) with the new committed row count.
+Readers trust only ``meta['n']`` — torn trailing bytes from a crashed
+append are ignored and truncated away before the next append so row
+alignment between the two files can never drift.
 
 Thread-safety: one instance may be shared by the sharded search driver's
 prefetch thread and by simulated-cluster worker threads — appends are
@@ -22,6 +30,8 @@ import numpy as np
 
 from repro.data.table import stable_id_hash, stable_id_hash_array
 
+_IDS_DTYPE = np.dtype("<i8")
+
 
 class EmbeddingCache:
     def __init__(self, path: str, dim: int, dtype=np.float16):
@@ -30,7 +40,8 @@ class EmbeddingCache:
         self.dtype = np.dtype(dtype)
         os.makedirs(path, exist_ok=True)
         self._vec_path = os.path.join(path, "vectors.bin")
-        self._ids_path = os.path.join(path, "ids.npy")
+        self._ids_path = os.path.join(path, "ids.bin")
+        self._legacy_ids_path = os.path.join(path, "ids.npy")
         self._meta_path = os.path.join(path, "meta.json")
         self._ids = np.empty(0, np.int64)
         self._sorted = None
@@ -39,16 +50,39 @@ class EmbeddingCache:
         self._load()
 
     def _load(self):
-        if os.path.exists(self._meta_path):
-            with open(self._meta_path) as f:
-                meta = json.load(f)
-            assert meta["dim"] == self.dim, "cache dim mismatch"
-            self.dtype = np.dtype(meta["dtype"])
-            self._ids = np.load(self._ids_path, mmap_mode="r")
-            self._refresh_mmap()
+        if not os.path.exists(self._meta_path):
+            return
+        with open(self._meta_path) as f:
+            meta = json.load(f)
+        assert meta["dim"] == self.dim, "cache dim mismatch"
+        self.dtype = np.dtype(meta["dtype"])
+        if (os.path.exists(self._legacy_ids_path)
+                and not os.path.exists(self._ids_path)):
+            # one-shot migration from the legacy full-rewrite ids.npy
+            # layout (atomic: tmp + replace; the .npy is kept as-is and
+            # simply ignored once ids.bin exists)
+            legacy = np.load(self._legacy_ids_path)
+            tmp = self._ids_path + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(np.ascontiguousarray(legacy, _IDS_DTYPE).tobytes())
+            os.replace(tmp, self._ids_path)
+        self._truncate_uncommitted(int(meta["n"]))
+        self._refresh(int(meta["n"]))
 
-    def _refresh_mmap(self):
-        n = len(self._ids)
+    def _truncate_uncommitted(self, n: int):
+        """Drop torn trailing bytes left by a crashed append: everything
+        past the committed ``n`` rows in either file is garbage."""
+        for fpath, row_bytes in ((self._ids_path, _IDS_DTYPE.itemsize),
+                                 (self._vec_path,
+                                  self.dim * self.dtype.itemsize)):
+            want = n * row_bytes
+            if os.path.exists(fpath) and os.path.getsize(fpath) > want:
+                with open(fpath, "r+b") as f:
+                    f.truncate(want)
+
+    def _refresh(self, n: int):
+        self._ids = (np.memmap(self._ids_path, dtype=_IDS_DTYPE, mode="r",
+                               shape=(n,)) if n else np.empty(0, np.int64))
         self._mmap = (np.memmap(self._vec_path, dtype=self.dtype, mode="r",
                                 shape=(n, self.dim)) if n else None)
         self._sorted = None
@@ -64,19 +98,19 @@ class EmbeddingCache:
         hashes = stable_id_hash_array(ids)
         assert len(hashes) == len(vectors)
         with self._lock:
+            n = len(self._ids)
+            self._truncate_uncommitted(n)
             with open(self._vec_path, "ab") as f:
                 f.write(vectors.tobytes())
-            new_ids = np.concatenate([np.asarray(self._ids), hashes])
-            tmp = self._ids_path + ".tmp.npy"
-            np.save(tmp, new_ids)
-            os.replace(tmp, self._ids_path)
+            with open(self._ids_path, "ab") as f:
+                f.write(np.ascontiguousarray(hashes, _IDS_DTYPE).tobytes())
+            new_n = n + len(hashes)
             tmp_meta = self._meta_path + ".tmp"
             with open(tmp_meta, "w") as f:
                 json.dump({"dim": self.dim, "dtype": self.dtype.name,
-                           "n": len(new_ids)}, f)
+                           "n": new_n}, f)
             os.replace(tmp_meta, self._meta_path)
-            self._ids = new_ids
-            self._refresh_mmap()
+            self._refresh(new_n)
 
     # -- read -------------------------------------------------------------------
     def _index(self):
@@ -121,3 +155,45 @@ class EmbeddingCache:
 
     def get_one(self, raw_id) -> np.ndarray:
         return self.get([raw_id])[0]
+
+    # -- bulk plans (superchunk streaming) ---------------------------------------
+    def ids_array(self) -> np.ndarray:
+        """Committed id hashes in insertion (row) order."""
+        with self._lock:
+            return np.asarray(self._ids)
+
+    def get_range(self, lo: int, hi: int) -> np.ndarray:
+        """Rows ``[lo, hi)`` in insertion order: one contiguous mmap read,
+        no searchsorted — the streaming fast path when the cache's row
+        order is the corpus order (see :meth:`row_plan`)."""
+        with self._lock:
+            n, mmap = len(self._ids), self._mmap
+        if not 0 <= lo <= hi <= n:
+            raise IndexError(f"range [{lo}, {hi}) outside [0, {n}]")
+        if lo == hi:
+            return np.empty((0, self.dim), self.dtype)
+        return np.asarray(mmap[lo:hi])
+
+    def get_rows(self, rows: np.ndarray) -> np.ndarray:
+        """Fetch explicit row numbers (from a precomputed plan)."""
+        with self._lock:
+            mmap = self._mmap
+        return np.asarray(mmap[rows])
+
+    def row_plan(self, hashes: np.ndarray):
+        """One-shot lookup plan for streaming ``hashes`` in order.
+
+        Returns ``("range", None)`` when the cache rows are exactly
+        ``hashes`` in insertion order (chunks can use :meth:`get_range`
+        — zero per-chunk index work), ``("rows", rows)`` when every hash
+        is cached but permuted (one upfront searchsorted instead of one
+        per chunk), or ``None`` if any hash is missing (callers fall
+        back to the encode-missing path)."""
+        ids = self.ids_array()
+        if len(ids) == len(hashes) and np.array_equal(ids, hashes):
+            return ("range", None)
+        if len(ids):
+            rows = self._rows_for(np.asarray(hashes, np.int64))
+            if not (rows < 0).any():
+                return ("rows", rows)
+        return None

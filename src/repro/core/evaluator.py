@@ -39,6 +39,33 @@ from repro.core.sharded_search import (  # noqa: F401 — re-exported API
 from repro.data.table import stable_id_hash, stable_id_hash_array
 
 
+def select_hard_negatives(q_ids: Sequence[str], run_ids: np.ndarray,
+                          scores: np.ndarray,
+                          qrels: dict[str, dict[str, float]],
+                          hash_to_raw: dict[int, str],
+                          exclude_positives: bool = True
+                          ) -> list[tuple[str, str, float]]:
+    """Turn ranked (Q, depth) id hashes into negative qrel triplets.
+
+    Vectorized per query: positives are hashed into one int64 array and
+    excluded via ``np.isin`` over the whole ranked row, instead of a
+    Python set-membership test per (query, rank) item.
+    """
+    out: list[tuple[str, str, float]] = []
+    for qi, q in enumerate(q_ids):
+        row = run_ids[qi]
+        keep = row >= 0
+        if exclude_positives:
+            pos = [d for d, g in qrels.get(q, {}).items() if g > 0]
+            if pos:
+                keep &= ~np.isin(row, stable_id_hash_array(pos))
+        out.extend(
+            (q, hash_to_raw[h], s)
+            for h, s in zip(row[keep].tolist(),
+                            scores[qi][keep].tolist()))
+    return out
+
+
 class RetrievalEvaluator:
     def __init__(self, args: EvaluationArguments, retriever, collator,
                  params, mesh=None,
@@ -156,7 +183,22 @@ class RetrievalEvaluator:
                                    device=on_device)
         c_ids = list(corpus.keys())
 
+        # cached-corpus plan: when the cache already covers the corpus,
+        # resolve the position->row mapping ONCE (or skip it entirely if
+        # the cache rows are the corpus order) instead of running a
+        # searchsorted per streamed chunk; chunk loads become plain
+        # contiguous mmap reads that the driver stacks and uploads once
+        # per superchunk.
+        plan = (cache.row_plan(self._corpus_hashes(corpus))
+                if cache is not None and len(cache)
+                and self.args.use_cached_embeddings else None)
+
         def load_chunk(lo: int, hi: int):
+            if plan is not None:
+                kind, rows = plan
+                if kind == "range":
+                    return cache.get_range(lo, hi).astype(np.float32)
+                return cache.get_rows(rows[lo:hi]).astype(np.float32)
             chunk_ids = c_ids[lo:hi]
             return self.encode_corpus(
                 chunk_ids, [corpus[c] for c in chunk_ids], cache,
@@ -170,7 +212,9 @@ class RetrievalEvaluator:
             sharder=self.sharder, score_impl=self.args.score_impl,
             heap_impl=self.args.heap_impl,
             chunk_size=self.args.encode_batch_size,
-            prefetch=self.args.async_prefetch, gather=self.gather)
+            prefetch=self.args.async_prefetch, gather=self.gather,
+            superchunk_size=self.args.superchunk_size,
+            superchunk_max_mb=self.args.superchunk_max_mb)
         vals, pos = driver.search(q_emb, len(c_ids), load_chunk, topk)
         all_hashes = self._corpus_hashes(corpus)
         ids = np.where(pos >= 0, all_hashes[np.clip(pos, 0, None)], -1)
@@ -202,15 +246,8 @@ class RetrievalEvaluator:
                                                 cache=cache)
         hashes = self._corpus_hashes(corpus)
         hash_to_raw = dict(zip(hashes.tolist(), corpus.keys()))
-        out: list[tuple[str, str, float]] = []
-        for qi, q in enumerate(q_ids):
-            pos = {stable_id_hash(d) for d, g in qrels.get(q, {}).items()
-                   if g > 0}
-            for ri in range(run_ids.shape[1]):
-                did = int(run_ids[qi, ri])
-                if did < 0 or (exclude_positives and did in pos):
-                    continue
-                out.append((q, hash_to_raw[did], float(scores[qi, ri])))
+        out = select_hard_negatives(q_ids, run_ids, scores, qrels,
+                                    hash_to_raw, exclude_positives)
         if output_path:
             with open(output_path, "w") as f:
                 for q, d, s in out:

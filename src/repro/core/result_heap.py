@@ -38,6 +38,25 @@ def _update_jax(vals, ids, scores, chunk_ids, k: int):
     return top_v, top_i
 
 
+@partial(jax.jit, static_argnames=("k",), donate_argnums=(0, 1))
+def _merge_arrays_jax(vals, ids, cand_v, cand_i, k: int):
+    # one dispatch per merge instead of an eager where/concat/top_k/take
+    # op storm; the running state buffers are donated (selection ops
+    # only — no float arithmetic — so jit changes nothing numerically)
+    cand_v = jnp.where(jnp.isnan(cand_v), NEG_INF, cand_v)
+    cv = jnp.concatenate([vals, cand_v], axis=1)
+    ci = jnp.concatenate([ids, cand_i], axis=1)
+    top_v, pos = jax.lax.top_k(cv, k)
+    return top_v, jnp.take_along_axis(ci, pos, axis=1)
+
+
+@jax.jit
+def _finalize_sort(vals, ids):
+    order = jnp.argsort(-vals, axis=1)
+    return (jnp.take_along_axis(vals, order, 1),
+            jnp.take_along_axis(ids, order, 1))
+
+
 class FastResultHeapq:
     """Tracks top-k (score, doc_id) per query over streamed score chunks.
 
@@ -86,8 +105,11 @@ class FastResultHeapq:
             from repro.kernels import ops as kops
             scores = jnp.asarray(scores)
             scores = jnp.where(jnp.isnan(scores), NEG_INF, scores)
+            # the heap owns its state arrays and replaces them right
+            # here, so the kernel may merge into the donated buffers
             self.vals, self.ids = kops.topk_update(
-                self.vals, self.ids, scores, jnp.asarray(chunk_ids))
+                self.vals, self.ids, scores, jnp.asarray(chunk_ids),
+                donate=True)
             return
         self.vals, self.ids = _update_jax(
             self.vals, self.ids, jnp.asarray(scores),
@@ -116,18 +138,29 @@ class FastResultHeapq:
                     elif item > h[0]:
                         heapq.heapreplace(h, item)
             return
-        vals = jnp.asarray(vals, jnp.float32)
-        vals = jnp.where(jnp.isnan(vals), NEG_INF, vals)
-        cand_v = jnp.concatenate([self.vals, vals], axis=1)
-        cand_i = jnp.concatenate(
-            [self.ids, jnp.asarray(ids).astype(self.ids.dtype)], axis=1)
-        top_v, pos = jax.lax.top_k(cand_v, self.k)
-        self.vals = top_v
-        self.ids = jnp.take_along_axis(cand_i, pos, axis=1)
+        self.vals, self.ids = _merge_arrays_jax(
+            self.vals, self.ids, jnp.asarray(vals, jnp.float32),
+            jnp.asarray(ids).astype(self.ids.dtype), self.k)
 
     def merge(self, other: "FastResultHeapq"):
         """Merge another heap's state (cross-shard top-k reduction)."""
         self.merge_arrays(*other.finalize())
+
+    def adopt_state(self, vals, ids):
+        """Install a device-resident (Q, k) state wholesale — the hand-off
+        point for the superchunk scan executor, whose donated scan carry
+        IS the heap state.  Device impls only."""
+        assert self.impl != "python", "python impl has no array state"
+        assert vals.shape == (self.n_queries, self.k), vals.shape
+        self.vals = jnp.asarray(vals, jnp.float32)
+        self.ids = jnp.asarray(ids, jnp.int32)
+
+    def finalize_device(self):
+        """Device-side sorted finalize: -> (vals (Q,k) desc, ids int32)
+        as device arrays — no host transfer (device impls only; callers
+        that need numpy use :meth:`finalize`)."""
+        assert self.impl != "python", "python impl finalizes on host"
+        return _finalize_sort(self.vals, self.ids)
 
     def finalize(self):
         """-> (scores (Q,k) desc-sorted, doc_ids (Q,k)); -1 id == empty."""
@@ -139,7 +172,5 @@ class FastResultHeapq:
                     vals[q, j] = s
                     ids[q, j] = d
             return vals, ids
-        order = jnp.argsort(-self.vals, axis=1)
-        return (np.asarray(jnp.take_along_axis(self.vals, order, 1)),
-                np.asarray(jnp.take_along_axis(self.ids, order, 1),
-                           dtype=np.int64))
+        vals, ids = self.finalize_device()
+        return np.asarray(vals), np.asarray(ids, dtype=np.int64)

@@ -28,6 +28,7 @@ identical merged ranking.
 
 from __future__ import annotations
 
+import math
 import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Protocol, runtime_checkable
@@ -154,6 +155,80 @@ class MergeFnGather:
         return self.fn(heap)
 
 
+# -- superchunk autotune ------------------------------------------------------
+#
+# The superchunk executor folds S streamed chunks into ONE jitted
+# lax.scan dispatch (kernels.ops.superchunk_update).  How large S should
+# be is a machine property: the ratio of per-dispatch overhead (Python +
+# jit call + executable launch) to per-chunk device compute.  We measure
+# both once per (shape, backend) key with a quick warmup — a no-op jit
+# round-trip for the dispatch cost, a single-step scan for the per-chunk
+# cost — and size S so dispatch overhead is ~5% of superchunk work.
+
+_NOOP_DISPATCH_S: float | None = None
+_AUTOTUNE_CACHE: dict[tuple, int] = {}
+
+
+def _noop_dispatch_seconds() -> float:
+    """Per-call overhead of dispatching a trivial jitted function."""
+    global _NOOP_DISPATCH_S
+    if _NOOP_DISPATCH_S is None:
+        f = jax.jit(lambda x: x + 1)
+        x = jnp.zeros((8, 8), jnp.float32)
+        f(x).block_until_ready()
+        best = math.inf
+        for _ in range(5):
+            t0 = time.perf_counter()
+            f(x).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        _NOOP_DISPATCH_S = best
+    return _NOOP_DISPATCH_S
+
+
+def autotune_superchunk_size(n_queries: int, dim: int, chunk_size: int,
+                             k: int, score_impl: str, merge_impl: str,
+                             *, overhead_target: float = 0.05,
+                             floor: int = 8, ceiling: int = 256) -> int:
+    """Pick S so per-superchunk dispatch overhead is ~``overhead_target``
+    of its device work.  Cached per (shape, backend) key; the warmup
+    costs one small scan compile + a few microsecond-scale timed calls.
+    """
+    key = (n_queries, dim, chunk_size, k, score_impl, merge_impl,
+           jax.default_backend())
+    if key in _AUTOTUNE_CACHE:
+        return _AUTOTUNE_CACHE[key]
+    from repro.kernels import ops as kops
+    rows = n_queries + (-n_queries) % 8
+    # deterministic synthetic data (values are irrelevant to the timing)
+    q = (jnp.arange(max(rows * dim, 1), dtype=jnp.float32)
+         .reshape(rows, dim) % 7.0)
+    tile = (jnp.arange(chunk_size * dim, dtype=jnp.float32)
+            .reshape(1, chunk_size, dim) % 5.0)
+    offs = jnp.zeros(1, jnp.int32)
+    nvs = jnp.full(1, chunk_size, jnp.int32)
+
+    def one_step(v, i):
+        return kops.superchunk_update(v, i, q, tile, offs, nvs, k=k,
+                                      score=score_impl, merge=merge_impl)
+
+    v = jnp.full((rows, k), -jnp.inf, jnp.float32)
+    i = jnp.full((rows, k), -1, jnp.int32)
+    v, i = one_step(v, i)                     # compile
+    jax.block_until_ready((v, i))
+    per_chunk = math.inf
+    for _ in range(3):
+        t0 = time.perf_counter()
+        v, i = one_step(v, i)
+        jax.block_until_ready((v, i))
+        per_chunk = min(per_chunk, time.perf_counter() - t0)
+    dispatch = _noop_dispatch_seconds()
+    compute = max(per_chunk - dispatch, 1e-7)
+    s = int(math.ceil(dispatch / (overhead_target * compute)))
+    s = max(floor, min(ceiling, s))
+    _AUTOTUNE_CACHE[key] = s
+    return s
+
+
 # -- the driver ---------------------------------------------------------------
 
 ChunkLoader = Callable[[int, int], "np.ndarray | jax.Array"]
@@ -175,16 +250,29 @@ class ShardedSearchDriver:
         results — chunks are still scored in order — only overlap.
     gather : :class:`ShardGather` transport; ``None`` means local-only
         (the single-worker instantiation).
+    superchunk_size : chunks folded into one jitted scan dispatch
+        (device backends only).  ``0`` = autotune from a warmup
+        measurement; ``1`` = disable (one dispatch per chunk, the
+        pre-superchunk behavior); ``N > 1`` = fixed.  Host backends
+        (``score_impl='numpy'`` / ``heap_impl='python'``) always stream
+        per-chunk.  Never changes results — the scan replays the exact
+        per-chunk merge sequence on device.
+    superchunk_max_mb : cap on the stacked (S, C, d) tile so autotuned
+        or configured S can't blow device memory.
     """
 
     def __init__(self, *, n_workers: int = 1, worker_index: int = 0,
                  sharder: FairSharder | None = None,
                  score_impl: str = "jax", heap_impl: str = "jax",
                  chunk_size: int = 32, prefetch: bool = True,
-                 gather: ShardGather | None = None):
+                 gather: ShardGather | None = None,
+                 superchunk_size: int = 0, superchunk_max_mb: int = 64):
         if not 0 <= worker_index < n_workers:
             raise ValueError(
                 f"worker_index {worker_index} outside [0, {n_workers})")
+        if superchunk_size < 0:
+            raise ValueError(
+                f"superchunk_size must be >= 0, got {superchunk_size}")
         self.n_workers = n_workers
         self.worker_index = worker_index
         self.sharder = sharder if sharder is not None else FairSharder(
@@ -194,6 +282,8 @@ class ShardedSearchDriver:
         self.chunk_size = chunk_size
         self.prefetch = prefetch
         self.gather = gather
+        self.superchunk_size = superchunk_size
+        self.superchunk_max_mb = superchunk_max_mb
         # per-round observability (bench_multinode, serve logging)
         self.stats: dict = {}
 
@@ -228,6 +318,89 @@ class ShardedSearchDriver:
                     fut = ex.submit(load_chunk, *bounds[i + 1])
                 yield off, embs
 
+    # -- superchunk scan executor ---------------------------------------------
+    def _resolve_superchunk_size(self, n_queries: int, dim: int,
+                                 k: int) -> int:
+        """Effective S for this search (config / autotune / memory cap)."""
+        if self.superchunk_size == 1:
+            return 1
+        merge = "pallas" if self.heap_impl == "pallas" else "jax"
+        s = (self.superchunk_size if self.superchunk_size > 1 else
+             autotune_superchunk_size(n_queries, dim, self.chunk_size, k,
+                                      self.score_impl, merge))
+        # budget what actually uploads: compiled backends lane-align the
+        # chunk axis to 128 (see superchunk_update), so a chunk_size=32
+        # tile occupies 4x its nominal bytes on device
+        from repro.kernels.ops import _default_interpret
+        c = (self.chunk_size if _default_interpret()
+             else self.chunk_size + (-self.chunk_size) % 128)
+        tile_bytes = max(1, c * max(dim, 1) * 4)
+        cap = max(1, (self.superchunk_max_mb << 20) // tile_bytes)
+        return max(1, min(s, cap))
+
+    def _search_superchunk(self, q_emb, heap: FastResultHeapq, lo: int,
+                           hi: int, load_chunk: ChunkLoader, topk: int,
+                           s: int) -> int:
+        """Stream the slice through one-dispatch-per-superchunk scans.
+
+        Accumulates S loaded chunks (prefetch thread unchanged), stacks
+        them into an (S, C, d) tile — ONE host->device upload per
+        superchunk when chunks arrive as numpy — and folds the tile into
+        the donated device-resident (Q, k) state via a single jitted
+        lax.scan (``kernels.ops.superchunk_update``).  Returns the
+        number of scan dispatches.
+        """
+        from repro.kernels import ops as kops
+        n_q, dim = q_emb.shape
+        c = self.chunk_size
+        merge = "pallas" if self.heap_impl == "pallas" else "jax"
+        pad_rows = (-n_q) % 8
+        if isinstance(q_emb, np.ndarray):
+            qp = np.pad(q_emb, ((0, pad_rows), (0, 0))) if pad_rows \
+                else q_emb
+        else:
+            qp = jnp.pad(q_emb, ((0, pad_rows), (0, 0))) if pad_rows \
+                else q_emb
+        state_v = jnp.full((n_q + pad_rows, topk), -jnp.inf, jnp.float32)
+        state_i = jnp.full((n_q + pad_rows, topk), -1, jnp.int32)
+        dispatches = 0
+
+        def flush(buf):
+            nonlocal state_v, state_i, dispatches
+            offs = np.zeros(s, np.int32)
+            nvs = np.zeros(s, np.int32)
+            for si, (off, embs) in enumerate(buf):
+                offs[si] = off
+                nvs[si] = embs.shape[0]
+            if all(isinstance(e, np.ndarray) for _, e in buf):
+                tile = np.zeros((s, c, dim), np.float32)
+                for si, (_, embs) in enumerate(buf):
+                    tile[si, :embs.shape[0]] = embs
+            else:           # device-resident chunks (online encode path)
+                parts = []
+                for _, embs in buf:
+                    e = jnp.asarray(embs, jnp.float32)
+                    if e.shape[0] < c:
+                        e = jnp.pad(e, ((0, c - e.shape[0]), (0, 0)))
+                    parts.append(e)
+                parts += [jnp.zeros((c, dim), jnp.float32)] * (s - len(buf))
+                tile = jnp.stack(parts)
+            state_v, state_i = kops.superchunk_update(
+                state_v, state_i, qp, tile, offs, nvs, k=topk,
+                score=self.score_impl, merge=merge)
+            dispatches += 1
+
+        buf: list = []
+        for off, embs in self._pipelined_chunks(lo, hi, load_chunk):
+            buf.append((off, embs))
+            if len(buf) == s:
+                flush(buf)
+                buf = []
+        if buf:
+            flush(buf)
+        heap.adopt_state(state_v[:n_q], state_i[:n_q])
+        return dispatches
+
     def search(self, q_emb, n_docs: int, load_chunk: ChunkLoader,
                topk: int):
         """Run this worker's encode→score→local-top-k round, then reduce.
@@ -237,14 +410,25 @@ class ShardedSearchDriver:
         Positions are global corpus offsets; ``-1`` marks empty slots.
         """
         n_queries = q_emb.shape[0]
-        backend = get_score_backend(self.score_impl)
         heap = FastResultHeapq(n_queries, topk, impl=self.heap_impl)
         lo, hi = self.partition(n_docs)[self.worker_index]
-        n_chunks = 0
+        n_chunks = -(-max(hi - lo, 0) // self.chunk_size)
+        scan_ok = (self.score_impl in ("jax", "pallas_fused")
+                   and self.heap_impl in ("jax", "pallas") and hi > lo)
+        s = (self._resolve_superchunk_size(n_queries, q_emb.shape[1], topk)
+             if scan_ok else 1)
         t0 = time.monotonic()
-        for off, embs in self._pipelined_chunks(lo, hi, load_chunk):
-            backend(q_emb, embs, off, heap, topk)
-            n_chunks += 1
+        if scan_ok and s > 1:
+            executor = "superchunk"
+            dispatches = self._search_superchunk(
+                q_emb, heap, lo, hi, load_chunk, topk, s)
+        else:
+            executor = "per_chunk"
+            backend = get_score_backend(self.score_impl)
+            dispatches = 0
+            for off, embs in self._pipelined_chunks(lo, hi, load_chunk):
+                backend(q_emb, embs, off, heap, topk)
+                dispatches += 1
         seconds = time.monotonic() - t0
         # Report the round.  A shared sharder (SimulatedCluster) hears
         # every worker directly; with per-process sharder replicas (real
@@ -257,7 +441,9 @@ class ShardedSearchDriver:
         for rank, items, secs in reports:
             self.sharder.update(rank, items, secs)
         self.stats = {"lo": lo, "hi": hi, "items": hi - lo,
-                      "chunks": n_chunks, "seconds": seconds}
+                      "chunks": n_chunks, "seconds": seconds,
+                      "executor": executor, "superchunk_size": s,
+                      "dispatch_rounds": dispatches}
         if self.n_workers > 1 and self.gather is not None:
             heap = self.gather.merge(heap, self.worker_index)
         return heap.finalize()

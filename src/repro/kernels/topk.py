@@ -96,17 +96,24 @@ def topk_update_pallas(vals, ids, scores, chunk_ids, *, bq: int = 128,
     )(vals.astype(jnp.float32), ids.astype(jnp.int32), scores, cids2d)
 
 
-def _fused_kernel(q_ref, d_ref, out_v_ref, out_i_ref, *, k: int, bn: int,
-                  n_total: int, id_offset: int):
+def _fused_kernel(scal_ref, q_ref, d_ref, out_v_ref, out_i_ref, *, k: int,
+                  bn: int):
+    # scal_ref (1, 2) int32 = [id_offset, n_valid]: both *traced* scalars,
+    # so a streaming caller (lax.scan over corpus superchunks) can vary
+    # the chunk's global offset and its valid-row count per step without
+    # recompiling — the scan-carry contract of the superchunk executor.
     j = pl.program_id(1)
+    id_offset = scal_ref[0, 0]
+    n_valid = scal_ref[0, 1]
     scores = jax.lax.dot_general(
         q_ref[...], d_ref[...],
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)                     # (bq, bn)
     base = j * bn
     iota = jax.lax.broadcasted_iota(jnp.int32, scores.shape, 1) + base
-    # mask padded doc rows (n not a multiple of bn)
-    valid = iota < n_total
+    # mask padded doc rows: grid padding (n not a multiple of bn) and
+    # caller padding (ragged tail chunks stacked to a fixed tile) alike
+    valid = iota < n_valid
     scores = jnp.where(valid, scores, NEG_INF)
     tile_ids = jnp.where(valid, iota + id_offset, -1)
 
@@ -120,24 +127,32 @@ def _fused_kernel(q_ref, d_ref, out_v_ref, out_i_ref, *, k: int, bn: int,
     _select_topk_into(out_v_ref, out_i_ref, cand_v, cand_i, k)
 
 
-def fused_score_topk_pallas(queries, docs, k: int, *, id_offset: int = 0,
-                            bq: int = 128, bn: int = 512,
+def fused_score_topk_pallas(queries, docs, k: int, *, id_offset=0,
+                            n_valid=None, bq: int = 128, bn: int = 512,
                             interpret: bool = False):
     """Top-k of queries @ docs.T without materializing the score matrix.
 
     queries (Q, d), docs (N, d) -> (vals (Q,k) desc, ids int32 (Q,k)).
+
+    ``id_offset`` and ``n_valid`` may be traced int scalars (scan-friendly:
+    the superchunk executor varies both per scan step under one jit).
+    Docs rows at index >= ``n_valid`` (default N) score -inf / id -1, so a
+    ragged tail chunk padded up to a fixed tile shape stays inert.
     """
     q, d = queries.shape
     n = docs.shape[0]
     bq = min(bq, q)
     bn = min(bn, n)
     grid = (pl.cdiv(q, bq), pl.cdiv(n, bn))
-    kernel = functools.partial(_fused_kernel, k=k, bn=bn, n_total=n,
-                               id_offset=id_offset)
+    n_valid = n if n_valid is None else jnp.minimum(n_valid, n)
+    scal = jnp.stack([jnp.asarray(id_offset, jnp.int32),
+                      jnp.asarray(n_valid, jnp.int32)]).reshape(1, 2)
+    kernel = functools.partial(_fused_kernel, k=k, bn=bn)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
+            pl.BlockSpec((1, 2), lambda i, j: (0, 0)),
             pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
         ],
@@ -150,4 +165,4 @@ def fused_score_topk_pallas(queries, docs, k: int, *, id_offset: int = 0,
             jax.ShapeDtypeStruct((q, k), jnp.int32),
         ],
         interpret=interpret,
-    )(queries, docs)
+    )(scal, queries, docs)

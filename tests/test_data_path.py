@@ -84,6 +84,85 @@ def test_cache_missing_raises(tmp_path):
         c.get(["missing"])
 
 
+def test_cache_append_is_append_only(tmp_path, rng):
+    """cache_records must write O(delta) — the ids index file grows in
+    place (same inode, +8 bytes/row) instead of being re-saved in full
+    on every append (the old O(n²) layout)."""
+    import os
+    c = EmbeddingCache(str(tmp_path / "c"), dim=4)
+    ids_path = os.path.join(str(tmp_path / "c"), "ids.bin")
+    c.cache_records(["a", "b"], rng.normal(size=(2, 4)).astype(np.float16))
+    st1 = os.stat(ids_path)
+    c.cache_records(["c"], rng.normal(size=(1, 4)).astype(np.float16))
+    st2 = os.stat(ids_path)
+    assert st1.st_size == 2 * 8 and st2.st_size == 3 * 8
+    assert st1.st_ino == st2.st_ino        # appended, not replaced
+
+
+def test_cache_reopen_after_append(tmp_path, rng):
+    """Append → reopen → append again → reopen: every committed row is
+    served back, in insertion order, across sessions."""
+    v1 = rng.normal(size=(3, 4)).astype(np.float16)
+    v2 = rng.normal(size=(2, 4)).astype(np.float16)
+    c = EmbeddingCache(str(tmp_path / "c"), dim=4)
+    c.cache_records(["a", "b", "c"], v1)
+    c2 = EmbeddingCache(str(tmp_path / "c"), dim=4)
+    c2.cache_records(["d", "e"], v2)
+    assert len(c2) == 5
+    c3 = EmbeddingCache(str(tmp_path / "c"), dim=4)
+    got = c3.get(["e", "a", "d"])
+    np.testing.assert_allclose(got[0], v2[1], rtol=1e-3)
+    np.testing.assert_allclose(got[1], v1[0], rtol=1e-3)
+    np.testing.assert_allclose(got[2], v2[0], rtol=1e-3)
+    np.testing.assert_allclose(c3.get_range(0, 5),
+                               np.concatenate([v1, v2]), rtol=1e-3)
+
+
+def test_cache_ignores_torn_trailing_bytes(tmp_path, rng):
+    """A crash mid-append leaves trailing bytes past the committed meta
+    count; reopen must truncate them so the next append can't misalign
+    the ids/vectors row mapping."""
+    import os
+    c = EmbeddingCache(str(tmp_path / "c"), dim=4)
+    v = rng.normal(size=(2, 4)).astype(np.float16)
+    c.cache_records(["a", "b"], v)
+    # simulate a crash: rows hit both files but meta.json was never replaced
+    with open(os.path.join(str(tmp_path / "c"), "vectors.bin"), "ab") as f:
+        f.write(b"\x01" * 5)
+    with open(os.path.join(str(tmp_path / "c"), "ids.bin"), "ab") as f:
+        f.write(b"\x02" * 11)
+    c2 = EmbeddingCache(str(tmp_path / "c"), dim=4)
+    assert len(c2) == 2
+    w = rng.normal(size=(1, 4)).astype(np.float16)
+    c2.cache_records(["z"], w)
+    c3 = EmbeddingCache(str(tmp_path / "c"), dim=4)
+    np.testing.assert_allclose(c3.get(["z"])[0], w[0], rtol=1e-3)
+    np.testing.assert_allclose(c3.get(["b"])[0], v[1], rtol=1e-3)
+
+
+def test_cache_migrates_legacy_ids_npy(tmp_path, rng):
+    """Caches written by the old layout (full ids.npy re-save per append)
+    open cleanly: ids.npy is converted once to the append-only ids.bin."""
+    import json as _json
+    import os
+    from repro.data.table import stable_id_hash_array
+    d = tmp_path / "legacy"
+    os.makedirs(str(d))
+    v = rng.normal(size=(3, 4)).astype(np.float16)
+    with open(str(d / "vectors.bin"), "wb") as f:
+        f.write(v.tobytes())
+    np.save(str(d / "ids.npy"), stable_id_hash_array(["a", "b", "c"]))
+    with open(str(d / "meta.json"), "w") as f:
+        _json.dump({"dim": 4, "dtype": "float16", "n": 3}, f)
+    c = EmbeddingCache(str(d), dim=4)
+    assert len(c) == 3
+    np.testing.assert_allclose(c.get(["b"])[0], v[1], rtol=1e-3)
+    assert os.path.exists(str(d / "ids.bin"))
+    c.cache_records(["d"], rng.normal(size=(1, 4)).astype(np.float16))
+    c2 = EmbeddingCache(str(d), dim=4)
+    assert len(c2) == 4 and c2.has(["d"]).tolist() == [True]
+
+
 # -- neighbor sampler ------------------------------------------------------------
 
 def test_csr_from_edges():

@@ -260,3 +260,45 @@ def test_fair_sharder_bounds_cover():
     assert bounds[0][0] == 0 and bounds[-1][1] == 103
     for (a0, a1), (b0, b1) in zip(bounds, bounds[1:]):
         assert a1 == b0
+
+
+# -- hard-negative selection (vectorized vs loop reference) ------------------------
+
+def test_select_hard_negatives_equals_loop_reference():
+    """The np.isin-vectorized selector must pin the old per-item loop
+    (stable_id_hash + set membership over Q×k) exactly — same triplets,
+    same order, same float scores."""
+    from repro.core.evaluator import select_hard_negatives
+    from repro.data.table import stable_id_hash
+
+    rng = np.random.default_rng(42)
+    docs = [f"doc-{i}" for i in range(50)]
+    hashes = np.asarray([stable_id_hash(d) for d in docs], np.int64)
+    hash_to_raw = dict(zip(hashes.tolist(), docs))
+    q_ids = [f"q{i}" for i in range(7)]
+    qrels = {q: {docs[j]: float(g) for j, g in
+                 zip(rng.choice(50, size=4, replace=False),
+                     rng.integers(0, 3, size=4))}
+             for q in q_ids}                       # grades 0 — not all positive
+    depth = 12
+    run_ids = hashes[rng.integers(0, 50, size=(len(q_ids), depth))]
+    run_ids[0, 3] = -1                             # empty slots survive
+    run_ids[5, 0] = -1
+    scores = rng.normal(size=(len(q_ids), depth)).astype(np.float32)
+
+    def loop_reference(exclude_positives):
+        out = []
+        for qi, q in enumerate(q_ids):
+            pos = {stable_id_hash(d) for d, g in qrels.get(q, {}).items()
+                   if g > 0}
+            for ri in range(run_ids.shape[1]):
+                did = int(run_ids[qi, ri])
+                if did < 0 or (exclude_positives and did in pos):
+                    continue
+                out.append((q, hash_to_raw[did], float(scores[qi, ri])))
+        return out
+
+    for exclude in (True, False):
+        got = select_hard_negatives(q_ids, run_ids, scores, qrels,
+                                    hash_to_raw, exclude)
+        assert got == loop_reference(exclude)
