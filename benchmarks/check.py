@@ -38,6 +38,14 @@ def _multinode_metrics(payload):
     }
 
 
+def _encode_metrics(payload):
+    return {
+        "encode_speedup": payload["headline"]["encode_speedup"],
+        "warm_encode_speedup": payload["headline"]["warm_speedup"],
+        "compile_reduction": payload["headline"]["compile_reduction"],
+    }
+
+
 def _run_dispatch(out_json):
     from benchmarks import bench_dispatch
     return bench_dispatch.run(out_json=out_json)
@@ -48,16 +56,23 @@ def _run_multinode(out_json):
     return bench_multinode.run(out_json=out_json)
 
 
+def _run_encode(out_json):
+    from benchmarks import bench_encode
+    return bench_encode.run(out_json=out_json)
+
+
 # baseline file -> (fresh-run fn, metric extractor).  Metrics are all
 # higher-is-better ratios.
 CHECKS = {
     "bench_dispatch.json": (_run_dispatch, _dispatch_metrics),
     "bench_multinode.json": (_run_multinode, _multinode_metrics),
+    "bench_encode.json": (_run_encode, _encode_metrics),
 }
 
-# Structural metrics are deterministic functions of the code (dispatch
-# counts, not wall times): no noise allowance — any drop is a regression.
-EXACT_METRICS = {"dispatch_reduction"}
+# Structural metrics are deterministic functions of the code (dispatch /
+# compile counts, not wall times): no noise allowance — any drop is a
+# regression.
+EXACT_METRICS = {"dispatch_reduction", "compile_reduction"}
 
 
 def main(argv=None) -> int:

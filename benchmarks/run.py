@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §7 index):
   search   score_impl backends: host-numpy baseline vs device paths
   multinode  ShardedSearchDriver scaling W=1,2,4 (+ results/*.json)
   dispatch  per-chunk streaming vs superchunk scan (+ results/*.json)
+  encode   legacy per-batch padding vs bucketed pipeline (+ results/*.json)
 
 ``run.py --check [--tol T]`` re-runs the JSON-emitting benches into a
 scratch dir and compares their key metrics against the committed
@@ -24,10 +25,10 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (bench_dispatch, bench_kernels, bench_memory,
-                            bench_multinode, bench_result_heap,
-                            bench_scaling, bench_search_backends,
-                            bench_ttfs)
+    from benchmarks import (bench_dispatch, bench_encode, bench_kernels,
+                            bench_memory, bench_multinode,
+                            bench_result_heap, bench_scaling,
+                            bench_search_backends, bench_ttfs)
     bench_result_heap.run()
     bench_scaling.run()
     bench_ttfs.run()
@@ -36,6 +37,7 @@ def main() -> None:
     bench_search_backends.run()
     bench_multinode.run()
     bench_dispatch.run()
+    bench_encode.run()
 
 
 if __name__ == "__main__":

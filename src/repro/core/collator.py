@@ -33,6 +33,19 @@ class RetrievalCollator:
             batch["labels"] = np.stack([f["labels"] for f in features])
         return batch
 
-    def encode_texts(self, texts: list[str], max_len: int | None = None):
-        toks, mask = self._encode(texts, max_len or self.args.passage_max_len)
+    def max_len_for(self, is_query: bool) -> int:
+        """The side's own token budget — queries must not silently
+        inherit the passage budget.  Single source of truth for every
+        encode entry point (``encode_texts``, the evaluator, the encode
+        pipeline)."""
+        return (self.args.query_max_len if is_query
+                else self.args.passage_max_len)
+
+    def encode_texts(self, texts: list[str], max_len: int | None = None,
+                     is_query: bool = False):
+        """Tokenize free-standing texts; ``max_len`` defaults to the
+        side's own budget (see :meth:`max_len_for`)."""
+        if max_len is None:
+            max_len = self.max_len_for(is_query)
+        toks, mask = self._encode(texts, max_len)
         return {"tokens": toks, "mask": mask}

@@ -84,6 +84,23 @@ class EvaluationArguments:
     superchunk_size: int = 0
     # Cap on the stacked (S, C, d) superchunk tile uploaded per dispatch.
     superchunk_max_mb: int = 64
+    # Recompile-free bucketed encode pipeline (core.encode_pipeline):
+    # sort texts by token length, pad each fixed-batch-dim batch to the
+    # smallest rung of a geometric length ladder, restore the original
+    # order on output.  Encoder compiles are bounded by the ladder size
+    # (not the corpus) and padding FLOPs drop on varied-length corpora.
+    # encode_buckets = ladder rung count; 0 = legacy per-batch
+    # pad-to-longest encoding (one XLA compile per distinct shape).
+    encode_buckets: int = 6
+    # Host tokenization threads per tokenize call.  The intra-call
+    # fan-out pays off for tokenizers that release the GIL (e.g. Rust
+    # HF tokenizers duck-typed in); the pure-Python HashTokenizer is
+    # GIL-bound, where the win comes from the pipeline's tokenize-ahead
+    # overlap (encode_pipeline_depth) instead.
+    tokenizer_workers: int = 2
+    # Windows of text tokenized ahead of the device encode stage
+    # (bounded queue depth; 0 = tokenize synchronously).
+    encode_pipeline_depth: int = 2
 
 
 def parse_cli(*arg_classes, argv: Sequence[str] | None = None):

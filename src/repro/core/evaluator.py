@@ -19,6 +19,12 @@ Scoring is a pluggable backend (``EvaluationArguments.score_impl``, see
 Embedding caching: encoded chunks are written to the mmap'd
 EmbeddingCache; subsequent calls stream cached vectors (paper Table 3
 "w/ Cached Embs" path).
+
+Online (cache-less) encoding runs through the bucketed encode pipeline
+(``core.encode_pipeline``): background tokenization, ladder-bounded
+encoder compiles, device-resident chunks streamed straight into the
+driver's superchunk executor.  ``encode_buckets=0`` restores the legacy
+per-batch pad-to-longest loop; rankings are identical either way.
 """
 
 from __future__ import annotations
@@ -31,6 +37,7 @@ import numpy as np
 
 from repro.core.config import EvaluationArguments
 from repro.core.embedding_cache import EmbeddingCache
+from repro.core.encode_pipeline import EncodePipeline, PipelineChunkSource
 from repro.core.fair_sharding import FairSharder
 from repro.core.metrics import compute_metrics
 from repro.core.sharded_search import (  # noqa: F401 — re-exported API
@@ -98,11 +105,35 @@ class RetrievalEvaluator:
             self.gather = None
         self._encode_jit = jax.jit(
             lambda p, b: self.retriever.encoder.encode(p, b))
+        # bucketed encode pipeline (encode_buckets=0 -> legacy per-batch
+        # pad-to-longest loop, one XLA compile per distinct shape)
+        data_args = getattr(collator, "args", None)
+        self.encode_pipeline = (EncodePipeline(
+            lambda p, b: self.retriever.encoder.encode(p, b),
+            collator.tokenizer,
+            append_eos=getattr(collator, "append_eos", False),
+            pad_to_multiple=getattr(data_args, "pad_to_multiple", 8),
+            buckets=args.encode_buckets,
+            batch_size=args.encode_batch_size,
+            tokenizer_workers=args.tokenizer_workers,
+            depth=args.encode_pipeline_depth)
+            if args.encode_buckets > 0 and data_args is not None
+            and hasattr(collator, "tokenizer") else None)
         # (corpus_obj, key list, int64 hash array): corpora are hashed
         # once and reused across search/evaluate/mine_hard_negatives.
         self._corpus_hash_cache: tuple[dict, list, np.ndarray] | None = None
 
     # -- encoding ------------------------------------------------------------
+    def _max_len(self, is_query: bool) -> int | None:
+        resolve = getattr(self.collator, "max_len_for", None)
+        if resolve is not None:
+            return resolve(is_query)
+        data_args = getattr(self.collator, "args", None)  # duck-types
+        if data_args is None:
+            return None
+        return (data_args.query_max_len if is_query
+                else data_args.passage_max_len)
+
     def _encode_texts(self, texts: Sequence[str], is_query: bool,
                       max_len: int | None = None,
                       device: bool = False):
@@ -112,6 +143,14 @@ class RetrievalEvaluator:
                else self.retriever.format_passage)
         bs = (self.args.query_batch_size if is_query
               else self.args.encode_batch_size)
+        if max_len is None:
+            # queries must truncate/pad at query_max_len, not silently
+            # inherit the passage budget
+            max_len = self._max_len(is_query)
+        if self.encode_pipeline is not None:
+            return self.encode_pipeline.encode(
+                self.params, list(texts), max_len, fmt=fmt, device=device,
+                batch_size=bs)
         out = []
         for lo in range(0, len(texts), bs):
             chunk = [fmt(t) for t in texts[lo: lo + bs]]
@@ -193,16 +232,27 @@ class RetrievalEvaluator:
                 if cache is not None and len(cache)
                 and self.args.use_cached_embeddings else None)
 
-        def load_chunk(lo: int, hi: int):
-            if plan is not None:
-                kind, rows = plan
-                if kind == "range":
-                    return cache.get_range(lo, hi).astype(np.float32)
-                return cache.get_rows(rows[lo:hi]).astype(np.float32)
-            chunk_ids = c_ids[lo:hi]
-            return self.encode_corpus(
-                chunk_ids, [corpus[c] for c in chunk_ids], cache,
-                device=on_device)
+        if plan is None and cache is None and \
+                self.encode_pipeline is not None:
+            # online regime: the bucketed pipeline streams ordered,
+            # (device-resident for device backends) chunks straight into
+            # the driver's executor — tokenize overlaps encode, encoder
+            # compiles stay ladder-bounded, no per-chunk host round-trip
+            load_chunk = PipelineChunkSource(
+                self.encode_pipeline, self.params,
+                [corpus[c] for c in c_ids], self._max_len(False),
+                fmt=self.retriever.format_passage, device=on_device)
+        else:
+            def load_chunk(lo: int, hi: int):
+                if plan is not None:
+                    kind, rows = plan
+                    if kind == "range":
+                        return cache.get_range(lo, hi).astype(np.float32)
+                    return cache.get_rows(rows[lo:hi]).astype(np.float32)
+                chunk_ids = c_ids[lo:hi]
+                return self.encode_corpus(
+                    chunk_ids, [corpus[c] for c in chunk_ids], cache,
+                    device=on_device)
 
         # the evaluator is a thin instantiation of the sharded driver:
         # same code path for 1 process or W (paper: same script, any
@@ -248,7 +298,10 @@ class RetrievalEvaluator:
         hash_to_raw = dict(zip(hashes.tolist(), corpus.keys()))
         out = select_hard_negatives(q_ids, run_ids, scores, qrels,
                                     hash_to_raw, exclude_positives)
-        if output_path:
+        # every worker computes the identical merged triplets (allgather
+        # semantics), so only worker 0 writes: W workers racing one
+        # shared-FS path would tear or duplicate the file
+        if output_path and self.process_index == 0:
             with open(output_path, "w") as f:
                 for q, d, s in out:
                     f.write(f"{q}\t{d}\t{s}\n")

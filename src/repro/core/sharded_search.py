@@ -231,6 +231,9 @@ def autotune_superchunk_size(n_queries: int, dim: int, chunk_size: int,
 
 # -- the driver ---------------------------------------------------------------
 
+# legacy pull contract: (lo, hi) -> embeddings.  Objects exposing
+# ``open_slice(lo, hi, chunk_size)`` (chunk sources, e.g. the bucketed
+# encode pipeline) are accepted wherever a ChunkLoader is.
 ChunkLoader = Callable[[int, int], "np.ndarray | jax.Array"]
 
 
@@ -296,13 +299,26 @@ class ShardedSearchDriver:
     def _pipelined_chunks(self, lo: int, hi: int, load_chunk: ChunkLoader):
         """Yield ``(offset, embeddings)`` for this worker's slice.
 
-        With ``prefetch`` on, a single loader thread keeps exactly one
-        chunk in flight ahead of scoring (double buffering): while the
-        caller scores chunk ``i``, chunk ``i+1`` is being cache-read /
-        encoded / copied to device.  Loads stay serialized with each
-        other (one loader thread), so cache writes need no ordering
-        logic here.
+        ``load_chunk`` is either the legacy ``(lo, hi) -> embeddings``
+        callable, or a **chunk source** — an object with
+        ``open_slice(lo, hi, chunk_size)`` returning an ordered
+        ``(offset, embeddings)`` iterator (e.g.
+        ``core.encode_pipeline.PipelineChunkSource``).  A source runs
+        its own host/device overlap (background tokenize, bucketed
+        encode), so the driver's prefetch thread stands down for it.
+
+        With ``prefetch`` on (legacy callables), a single loader thread
+        keeps exactly one chunk in flight ahead of scoring (double
+        buffering): while the caller scores chunk ``i``, chunk ``i+1``
+        is being cache-read / encoded / copied to device.  Loads stay
+        serialized with each other (one loader thread), so cache writes
+        need no ordering logic here.
         """
+        open_slice = getattr(load_chunk, "open_slice", None)
+        if open_slice is not None:
+            if hi > lo:
+                yield from open_slice(lo, hi, self.chunk_size)
+            return
         bounds = [(off, min(off + self.chunk_size, hi))
                   for off in range(lo, hi, self.chunk_size)]
         if not self.prefetch or len(bounds) <= 1:

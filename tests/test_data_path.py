@@ -30,6 +30,43 @@ def test_tokenizer_eos():
     assert t.encode("a b c d e", max_len=3, append_eos=True)[-1] == t.eos_id
 
 
+def test_tokenizer_truncate_to_empty():
+    """Truncation may leave nothing: the eos re-pin must not IndexError
+    on an empty id list (regression: max_len=0 / empty text)."""
+    t = HashTokenizer(100)
+    assert t.encode("a b c", max_len=0, append_eos=True) == []
+    assert t.encode("a b c", max_len=0) == []
+    assert t.encode("", max_len=5, append_eos=True) == [t.eos_id]
+    assert t.encode("", max_len=0, append_eos=True) == []
+    assert t.encode("a b c", max_len=1, append_eos=True) == [t.eos_id]
+    assert t.batch_encode_ids(["a b", ""], max_len=0, append_eos=True) \
+        == [[], []]
+
+
+def test_batch_encode_ids_matches_scalar_encode():
+    """The np.unique vectorized batch path must reproduce the scalar
+    encode() exactly — same ids, same truncation/eos semantics."""
+    t = HashTokenizer(512)
+    texts = ["Hello, World!", "", "a a a a a", "punct...!?", "x" * 40,
+             " ".join(f"tok{i}" for i in range(30)), "ümlaut çedilla",
+             "123 456 123"]
+    for max_len in (None, 0, 3, 16):
+        for eos in (False, True):
+            fresh = HashTokenizer(512)     # no warm id cache
+            want = [t.encode(x, max_len, eos) for x in texts]
+            assert t.batch_encode_ids(texts, max_len, eos) == want
+            assert fresh.batch_encode_ids(texts, max_len, eos) == want
+
+
+def test_batch_encode_matches_legacy_padding():
+    t = HashTokenizer(256)
+    texts = ["a b c", "a", "d e f g h i j"]
+    toks, mask = t.batch_encode(texts, max_len=16, pad_to_multiple=4)
+    assert toks.shape == (3, 8)            # longest=7 -> padded to 8
+    assert mask.sum(1).tolist() == [3, 1, 7]
+    assert (toks[mask == 0] == t.pad_id).all()
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.text(min_size=0, max_size=80), st.integers(2, 16))
 def test_collator_shapes_property(text, max_len):
@@ -46,6 +83,17 @@ def test_collator_shapes_property(text, max_len):
     m = batch["query"]["mask"]
     # mask is a prefix of ones
     assert (np.cumsum(1 - m[0]) * m[0] == 0).all()
+
+
+def test_collator_encode_texts_per_side_budget():
+    args = DataArguments(query_max_len=4, passage_max_len=16,
+                         vocab_size=128, pad_to_multiple=1)
+    coll = RetrievalCollator(args, HashTokenizer(128))
+    text = " ".join(f"w{i}" for i in range(10))
+    assert coll.max_len_for(True) == 4 and coll.max_len_for(False) == 16
+    assert coll.encode_texts([text], is_query=True)["mask"].sum() == 4
+    assert coll.encode_texts([text])["mask"].sum() == 10
+    assert coll.encode_texts([text], max_len=2)["mask"].sum() == 2
 
 
 def test_collator_labels_passthrough():

@@ -151,6 +151,31 @@ def test_heap_impls_agree_end_to_end(tiny_retriever, tiny_params,
     np.testing.assert_array_equal(results["jax"], results["pallas"])
 
 
+@pytest.mark.parametrize("buckets", (0, 6))
+def test_query_encoding_respects_query_max_len(tiny_retriever, tiny_params,
+                                               buckets):
+    """Queries must truncate at query_max_len, not silently inherit the
+    passage budget (regression: _encode_texts never routed a max_len, so
+    collator.encode_texts fell back to passage_max_len for queries)."""
+    coll = RetrievalCollator(
+        DataArguments(vocab_size=257, query_max_len=4, passage_max_len=64),
+        HashTokenizer(257))
+    ev = RetrievalEvaluator(
+        EvaluationArguments(topk=2, encode_buckets=buckets,
+                            metrics=("ndcg@10",)),
+        tiny_retriever, coll, tiny_params)
+    words = [f"w{i}" for i in range(40)]
+    long_q = " ".join(words)
+    head_q = " ".join(words[:4])
+    q_long = ev._encode_texts([long_q], True)
+    q_head = ev._encode_texts([head_q], True)
+    # truncated at query_max_len=4: the 40-word query IS its 4-word head
+    np.testing.assert_allclose(q_long, q_head, rtol=1e-5, atol=1e-6)
+    # ...and not the passage-budget encoding of all 40 words
+    p_long = ev._encode_texts([long_q], False)
+    assert np.abs(q_long - p_long).max() > 1e-3
+
+
 # -- cross-backend equivalence -----------------------------------------------------
 
 SCORE_IMPLS = ("numpy", "jax", "pallas_fused")
