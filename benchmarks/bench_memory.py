@@ -1,14 +1,36 @@
-"""Paper Table 1: data-preparation memory — naive in-RAM loading vs
-Trove's mmap'd MaterializedQRel.
+"""Paper Table 1 memory bench + the dataset-view concat variant.
 
-Each variant runs in its own subprocess; we report peak RSS minus that
+Two claims, both measured as subprocess peak RSS (VmHWM) minus that
 variant's *import floor* (python+numpy+allocator baseline, measured
 separately — on this container jemalloc's arena floor is ~400 MB, far
-above the workload, so raw peaks would be meaningless).  The dataset is
-a scaled MS-MARCO-like synthetic corpus; the paper's 2.6x factor is the
-target ratio at benchmark scale.
+above the workload, so raw peaks would be meaningless):
+
+* **table1** — naive in-RAM loading vs Trove's mmap'd
+  ``MaterializedQRel`` (the paper's 2.6x factor at benchmark scale).
+* **concat_view** — a combined TWO-dataset eval corpus.  Naively that
+  is both corpora json-loaded into one dict (O(N_a + N_b) resident);
+  through ``ConcatView(TableView(a), TableView(b))`` the union is
+  streamed chunk-by-chunk with mmap page eviction behind the scan
+  (``open_slice`` -> ``advise_dontneed``), so the union never exists in
+  RAM and peak RSS stays ≈ a single part's streaming scan (flat), not
+  the sum of parts.
+
+Gate metrics (``results/bench_memory.json``, checked by
+``benchmarks/run.py --check``):
+
+* ``table1.ratio`` — naive/trove net MB (higher = better).
+* ``concat_view.saving`` — naive union load / concat streaming.
+* ``concat_view.flatness`` — streamed payload MB / concat net MB: a
+  broken eviction path keeps every touched page resident and flatness
+  collapses to ~1.
+* ``concat_view.vs_max_parts`` — ``(max part + C) / (concat + C)`` with
+  a C=32 MB cushion: both sides of a healthy run are flat few-MB scans
+  (ratio ≈ 1 with the cushion damping allocator noise), while a
+  regression that makes the combined scan accumulate the union payload
+  drags the ratio far below the gate floor.
 """
 
+import json
 import os
 import tempfile
 
@@ -17,6 +39,13 @@ from benchmarks.common import emit, peak_rss_of
 N_DOCS = 150_000
 N_QUERIES = 8_000
 DOC_LEN = 80
+PART_DOCS = 75_000
+PART_QUERIES = 4_000
+CUSHION_MB = 32.0
+
+DEFAULT_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "bench_memory.json")
 
 _GEN = f"""
 import os
@@ -25,6 +54,13 @@ d = {{dir!r}}
 if not os.path.exists(os.path.join(d, "queries.jsonl")):
     make_retrieval_dataset(d, n_queries={N_QUERIES}, n_docs={N_DOCS},
                            n_topics=512, doc_len={DOC_LEN})
+for i in range(2):
+    p = os.path.join(d, f"part{{{{i}}}}")
+    if not os.path.exists(os.path.join(p, "queries.jsonl")):
+        make_retrieval_dataset(p, n_queries={PART_QUERIES},
+                               n_docs={PART_DOCS}, n_topics=512,
+                               doc_len={DOC_LEN}, seed=10 + i,
+                               id_prefix=f"p{{{{i}}}}-")
 """
 
 _NAIVE_IMPORTS = "import json\nd = {dir!r}\n"
@@ -66,14 +102,53 @@ for i in range(len(ds)):
 print("instances", len(ds), n)
 """
 
+# naive combined eval corpus: both parts json-loaded into ONE dict
+_UNION_NAIVE = """
+corpus = {}
+for i in range(2):
+    with open(d + f"/part{i}/corpus.jsonl") as f:
+        for line in f:
+            r = json.loads(line); corpus[r["_id"]] = r["text"]
+texts = list(corpus.values())
+print("union docs", len(corpus), sum(len(t) for t in texts[:8]))
+"""
 
-def run(out_dir=None):
+_VIEW_IMPORTS = """
+from repro.core.config import MaterializedQRelConfig
+from repro.core.materialized_qrel import MaterializedQRel
+from repro.data.views import ConcatView, row_text
+d = {dir!r}
+def corpus_view(i):
+    p = d + f"/part{{i}}"
+    return MaterializedQRel(MaterializedQRelConfig(
+        qrel_path=p + "/qrels/train.tsv", query_path=p + "/queries.jsonl",
+        corpus_path=p + "/corpus.jsonl"),
+        cache_root=d + "/cache").corpus_view()
+def stream(view):
+    # the evaluator's chunk loop: materialize one chunk of texts, score,
+    # drop it; open_slice evicts the consumed mmap pages behind the scan
+    n = 0
+    for off, rows in view.open_slice(0, len(view), 1024):
+        n += sum(len(row_text(r)) for r in rows)
+    return n
+"""
+
+_PART_STREAM = "print('part bytes', stream(corpus_view({part})))\n"
+
+_CONCAT_STREAM = \
+    "print('union bytes', stream(ConcatView(corpus_view(0)," \
+    " corpus_view(1))))\n"
+
+
+def run(out_dir=None, out_json=DEFAULT_JSON):
     d = out_dir or os.path.join(tempfile.gettempdir(), "trove_bench_mem")
     os.makedirs(d, exist_ok=True)
     gen = _GEN.format(dir=d)
     peak_rss_of(gen)                                  # generate once
-    # warm Trove's table cache so build cost isn't in the measured run
+    # warm Trove's table caches so build cost isn't in the measured runs
     peak_rss_of(_TROVE_IMPORTS.format(dir=d) + _TROVE)
+    peak_rss_of(_VIEW_IMPORTS.format(dir=d) + _CONCAT_STREAM)
+
     naive_floor = peak_rss_of(_NAIVE_IMPORTS.format(dir=d))
     trove_floor = peak_rss_of(_TROVE_IMPORTS.format(dir=d))
     naive = peak_rss_of(_NAIVE_IMPORTS.format(dir=d) + _NAIVE)
@@ -85,7 +160,53 @@ def run(out_dir=None):
     emit("table1_memory_trove_mb", t_net * 1000,
          f"{t_net:.0f}MB (floor {trove_floor:.0f}MB)")
     emit("table1_memory_ratio", 0.0, f"{n_net / t_net:.2f}x reduction")
-    return {"naive_mb": n_net, "trove_mb": t_net}
+
+    view_floor = peak_rss_of(_VIEW_IMPORTS.format(dir=d))
+    union_naive = peak_rss_of(
+        _NAIVE_IMPORTS.format(dir=d) + _UNION_NAIVE)
+    parts = [peak_rss_of(_VIEW_IMPORTS.format(dir=d)
+                         + _PART_STREAM.format(part=i))
+             for i in range(2)]
+    concat = peak_rss_of(_VIEW_IMPORTS.format(dir=d) + _CONCAT_STREAM)
+    u_net = max(union_naive - naive_floor, 1e-3)
+    p_nets = [max(p - view_floor, 1e-3) for p in parts]
+    c_net = max(concat - view_floor, 1e-3)
+    payload_mb = sum(
+        os.path.getsize(os.path.join(d, f"part{i}", "corpus.jsonl"))
+        for i in range(2)) / 1e6
+    saving = u_net / c_net
+    flatness = payload_mb / c_net
+    vs_max_parts = (max(p_nets) + CUSHION_MB) / (c_net + CUSHION_MB)
+    emit("concat_union_naive_mb", u_net * 1000, f"{u_net:.0f}MB")
+    emit("concat_part_stream_mb", max(p_nets) * 1000,
+         f"{max(p_nets):.0f}MB max of parts (floor {view_floor:.0f}MB)")
+    emit("concat_view_stream_mb", c_net * 1000,
+         f"{c_net:.0f}MB for {payload_mb:.0f}MB streamed payload")
+    emit("concat_view_saving", 0.0,
+         f"{saving:.1f}x vs naive union; flatness {flatness:.1f}x; "
+         f"vs max parts {vs_max_parts:.2f}")
+
+    payload = {
+        "config": {"n_docs": N_DOCS, "n_queries": N_QUERIES,
+                   "doc_len": DOC_LEN, "part_docs": PART_DOCS,
+                   "part_queries": PART_QUERIES,
+                   "cushion_mb": CUSHION_MB},
+        "table1": {"naive_mb": round(n_net, 2),
+                   "trove_mb": round(t_net, 2),
+                   "ratio": round(n_net / t_net, 3)},
+        "concat_view": {"union_naive_mb": round(u_net, 2),
+                        "part_stream_mb": [round(p, 2) for p in p_nets],
+                        "concat_stream_mb": round(c_net, 2),
+                        "payload_mb": round(payload_mb, 2),
+                        "saving": round(saving, 3),
+                        "flatness": round(flatness, 3),
+                        "vs_max_parts": round(vs_max_parts, 3)},
+    }
+    if out_json:
+        os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+    return payload
 
 
 if __name__ == "__main__":

@@ -61,12 +61,27 @@ def _run_encode(out_json):
     return bench_encode.run(out_json=out_json)
 
 
+def _memory_metrics(payload):
+    return {
+        "table1_memory_ratio": payload["table1"]["ratio"],
+        "concat_saving": payload["concat_view"]["saving"],
+        "concat_flatness": payload["concat_view"]["flatness"],
+        "concat_vs_max_parts": payload["concat_view"]["vs_max_parts"],
+    }
+
+
+def _run_memory(out_json):
+    from benchmarks import bench_memory
+    return bench_memory.run(out_json=out_json)
+
+
 # baseline file -> (fresh-run fn, metric extractor).  Metrics are all
 # higher-is-better ratios.
 CHECKS = {
     "bench_dispatch.json": (_run_dispatch, _dispatch_metrics),
     "bench_multinode.json": (_run_multinode, _multinode_metrics),
     "bench_encode.json": (_run_encode, _encode_metrics),
+    "bench_memory.json": (_run_memory, _memory_metrics),
 }
 
 # Structural metrics are deterministic functions of the code (dispatch /

@@ -1,7 +1,8 @@
 """Benchmark harness — one entry per paper table (+ kernel benches).
 
 Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §7 index):
-  Table 1  memory: naive vs Trove data management
+  Table 1  memory: naive vs Trove data management, plus the ConcatView
+           combined-corpus streaming variant (+ results/*.json)
   Table 2  multi-node inference scaling (simulated nodes)
   Table 3  Python heapq vs FastResultHeapq (online / cached)
   Table 4  time-to-first-sample, first vs warm run

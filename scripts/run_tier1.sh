@@ -11,6 +11,14 @@ python -m pytest -x -q -m "not slow" "$@"
 echo "== tier-1 (full suite) =="
 python -m pytest -x -q "$@"
 
+echo "== eval suite smoke (2 synthetic datasets, per-dataset + combined) =="
+EVALSUITE_TMP="$(mktemp -d)"
+python -m repro.launch.evalsuite --smoke \
+  --data-root "$EVALSUITE_TMP/data" --out-dir "$EVALSUITE_TMP/results" \
+  --n-queries 8 --n-docs 48
+test -s "$EVALSUITE_TMP/results/evalsuite.json"
+rm -rf "$EVALSUITE_TMP"
+
 # Optional perf gate: re-run the JSON-recording benches and compare
 # against the committed results/*.json baselines (relative metrics,
 # tolerance for container noise).  Off by default — timing on shared CI

@@ -22,6 +22,18 @@ def _as_mqrels(cfgs, cache_root) -> list[MaterializedQRel]:
             else MaterializedQRel(c, cache_root) for c in cfgs]
 
 
+def _sources_view(sources: Sequence[MaterializedQRel], which: str):
+    """Lazy concat view over the sources' query/corpus tables, deduped
+    by table path (sources over the same file share one mmap table)."""
+    from repro.data.views import ConcatView, TableView
+    seen: dict[str, MaterializedQRel] = {}
+    for m in sources:
+        table = getattr(m, which)
+        seen.setdefault(table.path, table)
+    views = [TableView(t) for t in seen.values()]
+    return views[0] if len(views) == 1 else ConcatView(*views)
+
+
 class BinaryDataset:
     """Positives + negatives -> (query, [pos, neg...]) training instances."""
 
@@ -38,11 +50,26 @@ class BinaryDataset:
         self.seed = seed
         qids = np.unique(np.concatenate(
             [m.query_id_hashes for m in self.pos]))
-        # keep only queries that have at least one positive
-        self.qids = qids
+        # Keep only queries that still have >= 1 positive AFTER each
+        # source's on-the-fly processing: a source's id list alone can
+        # include queries whose positive group is empty at access time
+        # (e.g. group_random_k=0, or per-group filtering), which used to
+        # surface as an IndexError mid-epoch instead of a shorter epoch.
+        has_pos = np.fromiter(
+            (any(len(m.group(int(q))[0]) > 0 for m in self.pos)
+             for q in qids), bool, count=len(qids))
+        self.qids = qids[has_pos]
 
     def __len__(self):
         return len(self.qids)
+
+    def corpus_view(self):
+        """Lazy combined corpus of all sources (positives + negatives)."""
+        return _sources_view(self.pos + self.neg, "corpus")
+
+    def queries_view(self):
+        """Lazy combined query table of the positive sources."""
+        return _sources_view(self.pos, "queries")
 
     def __getitem__(self, i: int) -> dict:
         qid = int(self.qids[i])
@@ -110,6 +137,10 @@ class MultiLevelDataset:
 
     def __len__(self):
         return len(self.qids)
+
+    def corpus_view(self):
+        """Lazy combined corpus of all sources."""
+        return _sources_view(self.sources, "corpus")
 
     def __getitem__(self, i: int) -> dict:
         qid = int(self.qids[i])

@@ -25,6 +25,13 @@ Online (cache-less) encoding runs through the bucketed encode pipeline
 encoder compiles, device-resident chunks streamed straight into the
 driver's superchunk executor.  ``encode_buckets=0`` restores the legacy
 per-batch pad-to-longest loop; rankings are identical either way.
+
+Queries and corpora are ``{id: text}`` dicts or lazy
+``repro.data.views`` compositions — views stream per chunk through the
+driver, so filtered/combined corpora are searched without materialized
+copies.  ``evaluate_suite`` builds on that: N datasets evaluated
+per-dataset and against their lazily concatenated union, metric tables
+written once per suite.
 """
 
 from __future__ import annotations
@@ -44,6 +51,7 @@ from repro.core.sharded_search import (  # noqa: F401 — re-exported API
     SCORE_BACKENDS, MergeFnGather, ProcessAllGather, ShardedSearchDriver,
     get_score_backend)
 from repro.data.table import stable_id_hash, stable_id_hash_array
+from repro.data.views import ConcatView, DatasetView, as_view
 
 
 def select_hard_negatives(q_ids: Sequence[str], run_ids: np.ndarray,
@@ -70,6 +78,24 @@ def select_hard_negatives(q_ids: Sequence[str], run_ids: np.ndarray,
             (q, hash_to_raw[h], s)
             for h, s in zip(row[keep].tolist(),
                             scores[qi][keep].tolist()))
+    return out
+
+
+def format_metrics_table(results: dict[str, dict]) -> str:
+    """Markdown table: one row per dataset, one column per metric."""
+    if not results:
+        return "(no results)\n"
+    metrics = list(next(iter(results.values())).keys())
+    widths = [max(len("dataset"),
+                  *(len(n) for n in results))] + [
+        max(len(m), 6) for m in metrics]
+    def fmt_row(cells):
+        return "| " + " | ".join(
+            c.ljust(w) for c, w in zip(cells, widths)) + " |\n"
+    out = fmt_row(["dataset"] + metrics)
+    out += "|" + "|".join("-" * (w + 2) for w in widths) + "|\n"
+    for name, vals in results.items():
+        out += fmt_row([name] + [f"{vals[m]:.4f}" for m in metrics])
     return out
 
 
@@ -119,9 +145,9 @@ class RetrievalEvaluator:
             depth=args.encode_pipeline_depth)
             if args.encode_buckets > 0 and data_args is not None
             and hasattr(collator, "tokenizer") else None)
-        # (corpus_obj, key list, int64 hash array): corpora are hashed
-        # once and reused across search/evaluate/mine_hard_negatives.
-        self._corpus_hash_cache: tuple[dict, list, np.ndarray] | None = None
+        # (corpus_obj, key list, DictView): dict corpora are wrapped and
+        # hashed once, reused across search/evaluate/mine_hard_negatives.
+        self._corpus_view_cache: tuple[dict, list, DatasetView] | None = None
 
     # -- encoding ------------------------------------------------------------
     def _max_len(self, is_query: bool) -> int | None:
@@ -192,24 +218,41 @@ class RetrievalEvaluator:
             embs[np.nonzero(have)[0]] = got
         return embs
 
-    def _corpus_hashes(self, corpus: dict) -> np.ndarray:
-        keys = list(corpus.keys())
-        cached = self._corpus_hash_cache
-        # key-list equality (cheap C-level compare, pointer fast path)
-        # rather than identity alone: an in-place mutated dict must not
-        # serve stale hashes
-        if (cached is not None and cached[0] is corpus
-                and cached[1] == keys):
-            return cached[2]
-        hashes = stable_id_hash_array(keys)
-        self._corpus_hash_cache = (corpus, keys, hashes)
-        return hashes
+    def _corpus_view(self, corpus) -> DatasetView:
+        """Coerce a corpus/query container to a lazy view.
+
+        Views pass through (they cache their own id hashes); dicts are
+        wrapped in a ``DictView`` memoized per (object, key list) — the
+        key-list equality check (cheap C-level compare, pointer fast
+        path) rather than identity alone means an in-place mutated dict
+        is never served stale hashes.
+        """
+        if isinstance(corpus, DatasetView):
+            return corpus
+        if isinstance(corpus, dict):
+            keys = list(corpus.keys())
+            cached = self._corpus_view_cache
+            if (cached is not None and cached[0] is corpus
+                    and cached[1] == keys):
+                return cached[2]
+            view = as_view(corpus)
+            self._corpus_view_cache = (corpus, keys, view)
+            return view
+        return as_view(corpus)
+
+    def _corpus_hashes(self, corpus) -> np.ndarray:
+        return np.asarray(self._corpus_view(corpus).id_hashes)
 
     # -- search ----------------------------------------------------------------
-    def search(self, queries: dict[str, str], corpus: dict[str, str],
-               topk: int | None = None,
+    def search(self, queries, corpus, topk: int | None = None,
                cache: EmbeddingCache | None = None):
         """Dense retrieval: -> (qid_hashes, doc_id_hashes (Q,k), scores).
+
+        ``queries`` and ``corpus`` are ``{raw_id: text}`` dicts or any
+        lazy :class:`~repro.data.views.DatasetView` composition (filter /
+        map / select / concat / interleave) — views stream per chunk
+        through the driver, so e.g. a ``ConcatView`` corpus is scored
+        without the combined corpus ever existing in memory.
 
         Device-side top-k tracks int32 global corpus *positions*; they are
         mapped back to id hashes here on the host (JAX is 32-bit by
@@ -217,10 +260,11 @@ class RetrievalEvaluator:
         """
         topk = topk or self.args.topk
         on_device = self.args.score_impl != "numpy"
-        q_ids = list(queries.keys())
-        q_emb = self._encode_texts([queries[q] for q in q_ids], True,
-                                   device=on_device)
-        c_ids = list(corpus.keys())
+        q_view = self._corpus_view(queries)
+        q_emb = self._encode_texts(q_view.texts(), True, device=on_device)
+        corpus_v = self._corpus_view(corpus)
+        corpus_texts = corpus_v.texts()
+        all_hashes = np.asarray(corpus_v.id_hashes)
 
         # cached-corpus plan: when the cache already covers the corpus,
         # resolve the position->row mapping ONCE (or skip it entirely if
@@ -228,7 +272,7 @@ class RetrievalEvaluator:
         # searchsorted per streamed chunk; chunk loads become plain
         # contiguous mmap reads that the driver stacks and uploads once
         # per superchunk.
-        plan = (cache.row_plan(self._corpus_hashes(corpus))
+        plan = (cache.row_plan(all_hashes)
                 if cache is not None and len(cache)
                 and self.args.use_cached_embeddings else None)
 
@@ -237,10 +281,12 @@ class RetrievalEvaluator:
             # online regime: the bucketed pipeline streams ordered,
             # (device-resident for device backends) chunks straight into
             # the driver's executor — tokenize overlaps encode, encoder
-            # compiles stay ladder-bounded, no per-chunk host round-trip
+            # compiles stay ladder-bounded, no per-chunk host round-trip.
+            # ``corpus_texts`` is a lazy per-slice sequence, so view rows
+            # materialize one pipeline window at a time.
             load_chunk = PipelineChunkSource(
                 self.encode_pipeline, self.params,
-                [corpus[c] for c in c_ids], self._max_len(False),
+                corpus_texts, self._max_len(False),
                 fmt=self.retriever.format_passage, device=on_device)
         else:
             def load_chunk(lo: int, hi: int):
@@ -249,9 +295,10 @@ class RetrievalEvaluator:
                     if kind == "range":
                         return cache.get_range(lo, hi).astype(np.float32)
                     return cache.get_rows(rows[lo:hi]).astype(np.float32)
-                chunk_ids = c_ids[lo:hi]
+                # cache keys are stable hashes, so the already-hashed id
+                # slice addresses it for raw-id dicts and views alike
                 return self.encode_corpus(
-                    chunk_ids, [corpus[c] for c in chunk_ids], cache,
+                    all_hashes[lo:hi], corpus_texts[lo:hi], cache,
                     device=on_device)
 
         # the evaluator is a thin instantiation of the sharded driver:
@@ -265,16 +312,21 @@ class RetrievalEvaluator:
             prefetch=self.args.async_prefetch, gather=self.gather,
             superchunk_size=self.args.superchunk_size,
             superchunk_max_mb=self.args.superchunk_max_mb)
-        vals, pos = driver.search(q_emb, len(c_ids), load_chunk, topk)
-        all_hashes = self._corpus_hashes(corpus)
+        vals, pos = driver.search(q_emb, corpus_v, load_chunk, topk)
         ids = np.where(pos >= 0, all_hashes[np.clip(pos, 0, None)], -1)
-        q_hashes = stable_id_hash_array(q_ids)
+        q_hashes = np.asarray(q_view.id_hashes)
         return q_hashes, ids, vals
 
     # -- public API ---------------------------------------------------------------
-    def evaluate(self, queries: dict[str, str], corpus: dict[str, str],
+    def evaluate(self, queries, corpus,
                  qrels: dict[str, dict[str, float]],
                  cache: EmbeddingCache | None = None) -> dict:
+        """Metrics for one (queries, corpus, qrels) scenario.
+
+        ``queries``/``corpus`` may be dicts or lazy views; ``qrels`` may
+        be keyed by raw ids or by stable hashes (``stable_id_hash`` is
+        the identity on already-hashed int ids).
+        """
         q_hashes, run_ids, _ = self.search(queries, corpus, cache=cache)
         qrels_h = {
             stable_id_hash(q): {stable_id_hash(d): float(g)
@@ -282,8 +334,65 @@ class RetrievalEvaluator:
             for q, docs in qrels.items()}
         return compute_metrics(self.args.metrics, run_ids, q_hashes, qrels_h)
 
-    def mine_hard_negatives(self, queries: dict[str, str],
-                            corpus: dict[str, str],
+    def evaluate_suite(self, scenarios: dict[str, dict], *,
+                       combined: bool = True,
+                       cache: EmbeddingCache | None = None,
+                       out_dir: str | None = None,
+                       suite_name: str = "evalsuite") -> dict:
+        """Evaluate N datasets — per-dataset AND as one combined corpus.
+
+        ``scenarios`` maps a dataset name to ``{"queries", "corpus",
+        "qrels"}`` (dicts or views).  The combined pass concatenates the
+        query and corpus *views* (``ConcatView``) and unions the qrels,
+        so queries are scored against the union of all corpora without
+        the union ever being built on disk or in RAM.  Dataset id
+        spaces must be disjoint (namespace your ids per dataset, e.g.
+        via ``view.map(..., rekey=True)``) — collisions raise.
+
+        One shared ``cache`` (keyed by stable doc-id hash) serves every
+        per-dataset pass and the combined pass.  Runs single- or
+        multi-node with zero code changes: under a gather transport
+        every worker computes identical tables and only worker 0 writes
+        ``{out_dir}/{suite_name}.json`` / ``.md``.
+        """
+        results: dict[str, dict] = {}
+        for name, sc in scenarios.items():
+            results[name] = self.evaluate(sc["queries"], sc["corpus"],
+                                          sc["qrels"], cache=cache)
+        if combined and len(scenarios) > 1:
+            q_views = [self._corpus_view(sc["queries"])
+                       for sc in scenarios.values()]
+            c_views = [self._corpus_view(sc["corpus"])
+                       for sc in scenarios.values()]
+            for kind, views in (("query", q_views), ("doc", c_views)):
+                all_h = np.concatenate(
+                    [np.asarray(v.id_hashes) for v in views])
+                if len(np.unique(all_h)) != len(all_h):
+                    raise ValueError(
+                        f"duplicate {kind} ids across suite datasets — "
+                        f"namespace ids per dataset (e.g. "
+                        f"view.map(..., rekey=True)) before combining")
+            merged_qrels: dict = {}
+            for sc in scenarios.values():
+                merged_qrels.update(sc["qrels"])
+            results["combined"] = self.evaluate(
+                ConcatView(*q_views), ConcatView(*c_views), merged_qrels,
+                cache=cache)
+        if out_dir is not None and self.process_index == 0:
+            import json
+            import os
+            os.makedirs(out_dir, exist_ok=True)
+            payload = {"suite": suite_name, "metrics": self.args.metrics,
+                       "datasets": [n for n in scenarios],
+                       "results": results}
+            with open(os.path.join(out_dir, f"{suite_name}.json"),
+                      "w") as f:
+                json.dump(payload, f, indent=2, sort_keys=True)
+            with open(os.path.join(out_dir, f"{suite_name}.md"), "w") as f:
+                f.write(format_metrics_table(results))
+        return results
+
+    def mine_hard_negatives(self, queries, corpus,
                             qrels: dict[str, dict[str, float]],
                             depth: int | None = None,
                             exclude_positives: bool = True,
@@ -291,11 +400,12 @@ class RetrievalEvaluator:
                             cache: EmbeddingCache | None = None):
         """Top-ranked non-positives per query -> negative qrel triplets."""
         depth = depth or self.args.topk
-        q_ids = list(queries.keys())
+        q_ids = self._corpus_view(queries).raw_ids()
         q_hashes, run_ids, scores = self.search(queries, corpus, topk=depth,
                                                 cache=cache)
-        hashes = self._corpus_hashes(corpus)
-        hash_to_raw = dict(zip(hashes.tolist(), corpus.keys()))
+        corpus_v = self._corpus_view(corpus)
+        hashes = np.asarray(corpus_v.id_hashes)
+        hash_to_raw = dict(zip(hashes.tolist(), corpus_v.raw_ids()))
         out = select_hard_negatives(q_ids, run_ids, scores, qrels,
                                     hash_to_raw, exclude_positives)
         # every worker computes the identical merged triplets (allgather

@@ -13,6 +13,7 @@ the paper's 2.6x memory reduction mechanism (Table 1).
 
 from __future__ import annotations
 
+import hashlib
 import os
 
 import numpy as np
@@ -23,12 +24,39 @@ from repro.data.table import (MMapTable, atomic_write_dir,
                               config_fingerprint, file_fingerprint)
 
 
+def _fn_digest(fn) -> str | None:
+    """Cache-key contribution of a user callback.
+
+    ``__name__`` alone collides: every lambda is ``"<lambda>"``, so two
+    different filters would silently share a cached grouped-qrel dir.
+    Digest the bytecode plus everything that parameterizes it (consts,
+    names, closure cell values) so behaviourally different callables get
+    different keys, while re-defining the same lambda across runs keeps
+    hitting the cache.
+    """
+    if fn is None:
+        return None
+    code = getattr(fn, "__code__", None)
+    if code is None:                      # builtins / C callables
+        return getattr(fn, "__name__", repr(fn))
+    payload = code.co_code + repr(
+        (code.co_consts, code.co_names, code.co_varnames)).encode()
+    closure = getattr(fn, "__closure__", None)
+    if closure:
+        try:
+            payload += repr([c.cell_contents for c in closure]).encode()
+        except ValueError:                # empty cell
+            payload += b"<empty-cell>"
+    defaults = getattr(fn, "__defaults__", None)
+    if defaults:
+        payload += repr(defaults).encode()
+    return hashlib.blake2b(payload, digest_size=8).hexdigest()
+
+
 def _config_key(cfg: MaterializedQRelConfig) -> str:
     stable = (cfg.min_score, cfg.max_score, cfg.new_label,
               cfg.group_random_k, cfg.query_subset_from, cfg.seed,
-              getattr(cfg.filter_fn, "__name__", cfg.filter_fn and "fn"),
-              getattr(cfg.transform_fn, "__name__",
-                      cfg.transform_fn and "fn"))
+              _fn_digest(cfg.filter_fn), _fn_digest(cfg.transform_fn))
     return config_fingerprint(stable)
 
 
@@ -125,6 +153,34 @@ class MaterializedQRel:
             sel = rng.choice(len(dids), size=k, replace=False)
             dids, scores = dids[sel], scores[sel]
         return dids, scores
+
+    # -- views -----------------------------------------------------------------
+    def queries_view(self):
+        """Lazy :class:`~repro.data.views.TableView` over the query table."""
+        from repro.data.views import TableView
+        return TableView(self.queries)
+
+    def corpus_view(self):
+        """Lazy :class:`~repro.data.views.TableView` over the corpus table."""
+        from repro.data.views import TableView
+        return TableView(self.corpus)
+
+    def qrels_dict(self) -> dict[int, dict[int, float]]:
+        """Grouped qrels as ``{qid_hash: {did_hash: score}}``.
+
+        Hash-keyed, so it feeds ``RetrievalEvaluator.evaluate`` directly
+        (``stable_id_hash`` is the identity on already-hashed int ids).
+        Materializes id/score pairs only — no text.
+        """
+        out: dict[int, dict[int, float]] = {}
+        for pos, qid in enumerate(np.asarray(self.group_qids)):
+            lo = int(self.group_offsets[pos])
+            hi = int(self.group_offsets[pos + 1])
+            out[int(qid)] = {
+                int(d): float(s)
+                for d, s in zip(self.group_dids[lo:hi],
+                                self.group_scores[lo:hi])}
+        return out
 
     def query_text(self, qid_hash: int) -> str:
         return self.queries.get(qid_hash).get("text", "")

@@ -291,9 +291,16 @@ class ShardedSearchDriver:
         self.stats: dict = {}
 
     # -- coordinator ----------------------------------------------------------
-    def partition(self, n_docs: int) -> list[tuple[int, int]]:
-        """All workers' ``[lo, hi)`` corpus bounds for this round."""
-        return self.sharder.bounds(n_docs)
+    def partition(self, n_docs) -> list[tuple[int, int]]:
+        """All workers' ``[lo, hi)`` corpus bounds for this round.
+
+        ``n_docs`` is a document count or any sized corpus object — in
+        particular a lazy ``repro.data.views.DatasetView`` composition,
+        which is partitioned positionally without ever materializing it.
+        """
+        if not isinstance(n_docs, (int, np.integer)):
+            n_docs = len(n_docs)
+        return self.sharder.bounds(int(n_docs))
 
     # -- worker ---------------------------------------------------------------
     def _pipelined_chunks(self, lo: int, hi: int, load_chunk: ChunkLoader):
@@ -417,10 +424,12 @@ class ShardedSearchDriver:
         heap.adopt_state(state_v[:n_q], state_i[:n_q])
         return dispatches
 
-    def search(self, q_emb, n_docs: int, load_chunk: ChunkLoader,
+    def search(self, q_emb, n_docs, load_chunk: ChunkLoader,
                topk: int):
         """Run this worker's encode→score→local-top-k round, then reduce.
 
+        ``n_docs`` may be an int or a sized corpus object (e.g. a lazy
+        ``DatasetView``) — the FairSharder partitions it positionally.
         Returns the merged ``(scores (Q, k), positions (Q, k))`` —
         identical on every worker when a gather transport is set.
         Positions are global corpus offsets; ``-1`` marks empty slots.

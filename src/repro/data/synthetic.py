@@ -34,9 +34,12 @@ def _text(rng: np.random.Generator, topic: int, n_words: int,
 def make_retrieval_dataset(out_dir: str, n_queries: int = 64,
                            n_docs: int = 512, n_topics: int = 32,
                            doc_len: int = 30, query_len: int = 6,
-                           graded: bool = False, seed: int = 0):
+                           graded: bool = False, seed: int = 0,
+                           id_prefix: str = ""):
     """Writes corpus.jsonl, queries.jsonl, qrels/train.tsv (+ dev split).
 
+    ``id_prefix`` namespaces every query/doc id (multi-dataset eval
+    suites need disjoint id spaces across datasets).
     Returns (queries dict, corpus dict, qrels dict) for convenience.
     """
     rng = np.random.default_rng(seed)
@@ -46,7 +49,7 @@ def make_retrieval_dataset(out_dir: str, n_queries: int = 64,
     corpus = {}
     with open(os.path.join(out_dir, "corpus.jsonl"), "w") as f:
         for i in range(n_docs):
-            did = f"doc{i}"
+            did = f"{id_prefix}doc{i}"
             text = _text(rng, int(doc_topics[i]), doc_len, n_topics)
             corpus[did] = text
             f.write(json.dumps({"_id": did, "text": text}) + "\n")
@@ -56,7 +59,7 @@ def make_retrieval_dataset(out_dir: str, n_queries: int = 64,
     with open(os.path.join(out_dir, "queries.jsonl"), "w") as f, \
             open(os.path.join(out_dir, "qrels", "train.tsv"), "w") as qf:
         for i in range(n_queries):
-            qid = f"q{i}"
+            qid = f"{id_prefix}q{i}"
             topic = int(q_topics[i])
             text = _text(rng, topic, query_len, n_topics)
             queries[qid] = text
@@ -65,8 +68,8 @@ def make_retrieval_dataset(out_dir: str, n_queries: int = 64,
             qrels[qid] = {}
             for j, d in enumerate(rel_docs[:4]):
                 grade = (3 - min(j, 2)) if graded else 1
-                qrels[qid][f"doc{d}"] = float(grade)
-                qf.write(f"{qid}\tdoc{d}\t{grade}\n")
+                qrels[qid][f"{id_prefix}doc{d}"] = float(grade)
+                qf.write(f"{qid}\t{id_prefix}doc{d}\t{grade}\n")
     return queries, corpus, qrels
 
 

@@ -202,3 +202,27 @@ class MMapTable:
     def iter_rows(self) -> Iterator[dict]:
         for i in range(len(self)):
             yield self.row(i)
+
+    def advise_dontneed(self, lo_row: int, hi_row: int) -> None:
+        """Advise the payload pages of rows ``[lo_row, hi_row)`` away.
+
+        Streaming consumers (``views.TableView.open_slice``) call this
+        after a chunk is consumed so a full scan's resident set stays
+        flat instead of faulting the whole payload in.  Only pages
+        fully inside the byte range are dropped (boundary pages are
+        shared with neighbouring rows); clean file-backed pages re-fault
+        on the next access, so this is purely a residency hint.
+        Best effort: platforms without ``mmap.madvise`` no-op.
+        """
+        try:
+            import mmap as _mmap
+            mm = self._payload._mmap            # the backing mmap object
+            page = _mmap.PAGESIZE
+            start = int(self._offsets[max(lo_row, 0)])
+            end = int(self._offsets[min(hi_row, len(self))])
+            start = -(-start // page) * page    # round up
+            end = (end // page) * page          # round down
+            if end > start:
+                mm.madvise(_mmap.MADV_DONTNEED, start, end - start)
+        except (AttributeError, ValueError, OSError):
+            pass

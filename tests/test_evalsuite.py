@@ -1,0 +1,166 @@
+"""Multi-dataset eval suite: per-dataset + combined tables, with the
+combined pass pinned bitwise to an eagerly merged union oracle."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.collator import RetrievalCollator
+from repro.core.config import DataArguments, EvaluationArguments
+from repro.core.evaluator import RetrievalEvaluator, format_metrics_table
+from repro.data.synthetic import make_retrieval_dataset
+from repro.data.tokenizer import HashTokenizer
+
+
+@pytest.fixture(scope="module")
+def suite_data(tmp_path_factory):
+    """Two synthetic datasets with disjoint (prefixed) id spaces."""
+    root = tmp_path_factory.mktemp("suite")
+    out = {}
+    for i in range(2):
+        q, c, r = make_retrieval_dataset(
+            str(root / f"d{i}"), n_queries=12, n_docs=48, n_topics=6,
+            seed=20 + i, id_prefix=f"d{i}-")
+        out[f"d{i}"] = {"queries": q, "corpus": c, "qrels": r}
+    return out
+
+
+@pytest.fixture()
+def evaluator(tiny_retriever, tiny_params):
+    coll = RetrievalCollator(DataArguments(vocab_size=257),
+                             HashTokenizer(257))
+    return RetrievalEvaluator(
+        EvaluationArguments(topk=10, metrics=("ndcg@10", "mrr@10")),
+        tiny_retriever, coll, tiny_params)
+
+
+def test_suite_per_dataset_rows_match_individual_eval(evaluator,
+                                                      suite_data):
+    results = evaluator.evaluate_suite(suite_data)
+    assert set(results) == {"d0", "d1", "combined"}
+    for name, sc in suite_data.items():
+        solo = evaluator.evaluate(sc["queries"], sc["corpus"], sc["qrels"])
+        assert results[name] == solo
+
+
+def test_suite_combined_equals_eager_union_oracle(evaluator, suite_data):
+    """The ConcatView combined pass == evaluating eagerly merged dicts."""
+    results = evaluator.evaluate_suite(suite_data)
+    union = {k: {} for k in ("queries", "corpus", "qrels")}
+    for sc in suite_data.values():
+        for k in union:
+            union[k].update(sc[k])
+    oracle = evaluator.evaluate(union["queries"], union["corpus"],
+                                union["qrels"])
+    assert results["combined"] == oracle
+
+
+def test_suite_combined_rankings_bitwise(evaluator, suite_data):
+    """Stronger than metrics: the combined search itself is bitwise equal
+    to searching the eagerly merged union corpus."""
+    from repro.data.views import ConcatView, as_view
+    q_union, c_union = {}, {}
+    for sc in suite_data.values():
+        q_union.update(sc["queries"])
+        c_union.update(sc["corpus"])
+    qh_ref, ids_ref, s_ref = evaluator.search(q_union, c_union)
+    q_view = ConcatView(*[as_view(sc["queries"])
+                          for sc in suite_data.values()])
+    c_view = ConcatView(*[as_view(sc["corpus"])
+                          for sc in suite_data.values()])
+    qh, ids, s = evaluator.search(q_view, c_view)
+    np.testing.assert_array_equal(qh, qh_ref)
+    np.testing.assert_array_equal(ids, ids_ref)
+    np.testing.assert_array_equal(s, s_ref)
+
+
+def test_suite_rejects_duplicate_ids(evaluator, tmp_path):
+    q, c, r = make_retrieval_dataset(str(tmp_path / "dup"), n_queries=6,
+                                     n_docs=24, n_topics=4)
+    scenarios = {"a": {"queries": q, "corpus": c, "qrels": r},
+                 "b": {"queries": dict(q), "corpus": dict(c),
+                       "qrels": dict(r)}}
+    with pytest.raises(ValueError, match="duplicate"):
+        evaluator.evaluate_suite(scenarios)
+    # per-dataset still fine when the combined pass is off
+    results = evaluator.evaluate_suite(scenarios, combined=False)
+    assert set(results) == {"a", "b"}
+
+
+def test_suite_writes_tables(evaluator, suite_data, tmp_path):
+    out = str(tmp_path / "results")
+    results = evaluator.evaluate_suite(suite_data, out_dir=out,
+                                       suite_name="mysuite")
+    payload = json.load(open(os.path.join(out, "mysuite.json")))
+    assert payload["suite"] == "mysuite"
+    assert payload["datasets"] == ["d0", "d1"]
+    assert payload["results"] == results
+    md = open(os.path.join(out, "mysuite.md")).read()
+    assert md == format_metrics_table(results)
+    for name in ("d0", "d1", "combined"):
+        assert f"| {name}" in md
+    for m, val in results["combined"].items():
+        assert m in md
+        assert f"{val:.4f}" in md
+
+
+def test_suite_with_materialized_views(tiny_retriever, tiny_params,
+                                       suite_data, tmp_path):
+    """The evalsuite launcher path: MaterializedQRel-backed views and
+    hash-keyed qrels give the same tables as plain dicts."""
+    from repro.launch.evalsuite import build_scenarios
+    root = tmp_path / "mq"
+    dirs = []
+    for i, (name, sc) in enumerate(suite_data.items()):
+        d = root / name
+        make_retrieval_dataset(str(d), n_queries=12, n_docs=48,
+                               n_topics=6, seed=20 + i,
+                               id_prefix=f"d{i}-")
+        dirs.append(str(d))
+    coll = RetrievalCollator(DataArguments(vocab_size=257),
+                             HashTokenizer(257))
+    ev = RetrievalEvaluator(
+        EvaluationArguments(topk=10, metrics=("ndcg@10", "mrr@10")),
+        tiny_retriever, coll, tiny_params)
+    via_views = ev.evaluate_suite(
+        build_scenarios(dirs, str(tmp_path / "cache")))
+    via_dicts = ev.evaluate_suite(suite_data)
+    assert via_views == via_dicts
+
+
+@pytest.mark.distributed
+def test_suite_sharded_equals_single(tiny_retriever, tiny_params,
+                                     suite_data, tmp_path):
+    """W=2 simulated workers produce identical tables, worker 0 writes."""
+    from repro.launch.distributed import SimulatedCluster
+    coll = RetrievalCollator(DataArguments(vocab_size=257),
+                             HashTokenizer(257))
+    args = EvaluationArguments(topk=10, metrics=("ndcg@10", "mrr@10"))
+    single = RetrievalEvaluator(args, tiny_retriever, coll, tiny_params)
+    ref = single.evaluate_suite(suite_data)
+
+    out = str(tmp_path / "w2")
+    cluster = SimulatedCluster(2)
+    evs = [RetrievalEvaluator(args, tiny_retriever, coll, tiny_params,
+                              process_index=rank, process_count=2,
+                              gather=cluster.gather,
+                              sharder=cluster.sharder)
+           for rank in range(2)]
+    outs = cluster.run(lambda rank: evs[rank].evaluate_suite(
+        suite_data, out_dir=out, suite_name="w2"))
+    for res in outs:
+        assert res == ref
+    assert json.load(open(os.path.join(out, "w2.json")))["results"] == ref
+
+
+def test_evalsuite_cli_smoke(tmp_path):
+    """The launcher end to end on a tiny synthetic suite."""
+    from repro.launch import evalsuite
+    results = evalsuite.main([
+        "--smoke", "--data-root", str(tmp_path / "data"),
+        "--out-dir", str(tmp_path / "results"),
+        "--n-queries", "6", "--n-docs", "24", "--topk", "5"])
+    assert set(results) == {"d0", "d1", "combined"}
+    assert os.path.exists(str(tmp_path / "results" / "evalsuite.json"))

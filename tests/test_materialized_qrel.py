@@ -128,3 +128,66 @@ def test_combined_sources_union(retrieval_data, tmp_path):
     ds = MultiLevelDataset(DataArguments(group_size=4), lambda t: t,
                            lambda t: t, [a, b], str(tmp_path))
     assert len(ds) == len(m_all)
+
+
+def test_distinct_lambdas_get_distinct_group_caches(retrieval_data,
+                                                    tmp_path):
+    """Regression: ``_config_key`` used to key callbacks by ``__name__``,
+    so two different lambdas (both ``"<lambda>"``) silently shared one
+    cached grouped-qrel dir — the second filter got the first's groups."""
+    keep_all = MaterializedQRel(
+        _cfg(retrieval_data, filter_fn=lambda q, d, s: True),
+        str(tmp_path))
+    keep_none = MaterializedQRel(
+        _cfg(retrieval_data, filter_fn=lambda q, d, s: False),
+        str(tmp_path))
+    assert len(keep_all) == len(_naive_groups(retrieval_data))
+    assert len(keep_none) == 0
+
+
+def test_closure_parameterized_lambdas_not_conflated(retrieval_data,
+                                                     tmp_path):
+    """Same bytecode, different closure cells -> different caches."""
+    def at_least(t):
+        return lambda q, d, s: s >= t
+
+    m1 = MaterializedQRel(_cfg(retrieval_data, filter_fn=at_least(1)),
+                          str(tmp_path))
+    m2 = MaterializedQRel(_cfg(retrieval_data, filter_fn=at_least(99)),
+                          str(tmp_path))
+    assert len(m1) == len(_naive_groups(retrieval_data, min_score=1))
+    assert len(m2) == 0
+    # identical lambda re-definition still hits the same cache dir
+    from repro.core.materialized_qrel import _config_key
+    assert _config_key(_cfg(retrieval_data, filter_fn=at_least(1))) == \
+        _config_key(_cfg(retrieval_data, filter_fn=at_least(1)))
+
+
+def test_binary_dataset_drops_empty_positive_queries(retrieval_data,
+                                                     tmp_path):
+    """Regression: a query whose positive groups are all empty at access
+    time (e.g. ``group_random_k=0``) used to survive ``__init__`` and
+    blow up with IndexError mid-epoch; now it's dropped up front."""
+    half_qrels = str(tmp_path / "half.tsv")
+    qids = list(retrieval_data["qrels"])
+    with open(half_qrels, "w") as f:
+        for q in qids[: len(qids) // 2]:
+            for d, s in retrieval_data["qrels"][q].items():
+                f.write(f"{q}\t{d}\t{int(s)}\n")
+    d = retrieval_data["dir"]
+    pos_half = MaterializedQRelConfig(
+        qrel_path=half_qrels, query_path=f"{d}/queries.jsonl",
+        corpus_path=f"{d}/corpus.jsonl")
+    # contributes every query id, but with empty groups
+    pos_empty = _cfg(retrieval_data, group_random_k=0)
+    neg = _cfg(retrieval_data, group_random_k=2)
+    ds = BinaryDataset(DataArguments(group_size=2), lambda t: t,
+                       lambda t: t, [pos_half, pos_empty], neg,
+                       str(tmp_path))
+    assert len(ds) == len(qids) // 2
+    for i in range(len(ds)):            # no IndexError on any item
+        assert ds[i]["passages"]
+    all_empty = BinaryDataset(DataArguments(group_size=2), lambda t: t,
+                              lambda t: t, [pos_empty], neg,
+                              str(tmp_path))
+    assert len(all_empty) == 0
