@@ -1,0 +1,183 @@
+"""Continuous-batching serve frontend: QPS vs p50/p99 latency curve.
+
+The sequential baseline answers one request at a time against a
+prepared device-resident corpus — the old ``launch.serve`` loop, steady
+state, no coalescing.  The frontend runs the same single-query request
+stream from C ∈ {1, 2, 4, 8} concurrent submitter threads through
+``core.serving.ServeFrontend``: requests coalesce into micro-batches
+(flush at ``max_batch`` or ``max_wait_ms``), encode/score amortize one
+dispatch chain over the whole batch, and per-request rows demux back to
+futures.  At C=1 the frontend pays the flush deadline for no
+amortization (it should roughly tie the baseline); from C=4 up the
+micro-batches beat the sequential baseline on QPS — the headline gate.
+
+Everything is steady-state: the rung ladder (1..max_batch powers of
+two) is warmed before any timed pass, exactly like ``launch.serve``'s
+warm pass.  Results land in ``results/bench_serve.json`` for
+``run.py --check`` (QPS speedup and p99 toleranced; the
+completed/accepted fraction is structural — a dropped request is a bug,
+not noise).
+"""
+
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+DEFAULT_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "bench_serve.json")
+
+CONCURRENCIES = (1, 2, 4, 8)
+
+
+def _make_env(n_docs: int, n_queries: int):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.collator import RetrievalCollator
+    from repro.core.config import (DataArguments, EvaluationArguments,
+                                   ModelArguments)
+    from repro.core.evaluator import RetrievalEvaluator
+    from repro.data.tokenizer import HashTokenizer
+    from repro.models.retriever import BiEncoderRetriever
+    from repro.models.transformer import LMConfig
+
+    cfg = LMConfig(name="bench-serve", n_layers=2, d_model=64, n_heads=4,
+                   n_kv_heads=2, head_dim=16, d_ff=128, vocab_size=8192,
+                   dtype=jnp.float32, pooling="mean", remat=False)
+    retriever = BiEncoderRetriever.from_model_args(ModelArguments(), cfg)
+    params = retriever.init_params(jax.random.key(0))
+    coll = RetrievalCollator(DataArguments(vocab_size=8192),
+                             HashTokenizer(8192))
+    ev = RetrievalEvaluator(
+        EvaluationArguments(topk=10, encode_batch_size=32,
+                            metrics=("ndcg@10",)),
+        retriever, coll, params)
+    rng = np.random.default_rng(0)
+    corpus = {f"d{i}": " ".join(f"w{rng.integers(8_000)}"
+                                for _ in range(int(rng.integers(6, 48))))
+              for i in range(n_docs)}
+    queries = [" ".join(f"w{rng.integers(8_000)}"
+                        for _ in range(int(rng.integers(4, 16))))
+               for _ in range(n_queries)]
+    return ev, corpus, queries
+
+
+def _percentiles(lat_s):
+    lat_ms = np.sort(np.asarray(lat_s)) * 1e3
+    return (float(np.percentile(lat_ms, 50)),
+            float(np.percentile(lat_ms, 99)))
+
+
+def run(n_docs: int = 384, n_queries: int = 64, topk: int = 10,
+        n_requests: int = 64, max_batch: int = 16,
+        max_wait_ms: float = 2.0, out_json: str = DEFAULT_JSON):
+    from repro.core.serving import EvaluatorServeBackend, ServeFrontend
+
+    ev, corpus, queries = _make_env(n_docs, n_queries)
+    # one backend for everything: corpus prepared once, frontends below
+    # reuse it (ServeFrontend.close() drains the driver's reduce thread,
+    # which recreates lazily on the next round)
+    backend = EvaluatorServeBackend(ev, corpus)
+    reqs = [queries[i % len(queries)] for i in range(n_requests)]
+
+    # warm the rung ladder: every power-of-two micro-batch width a
+    # coalesced flush can produce, cycling through ALL query texts at
+    # each width so every length bucket compiles too
+    w = 1
+    while w <= max_batch:
+        for off in range(0, len(queries), w):
+            backend.begin([queries[(off + j) % len(queries)]
+                           for j in range(w)], topk).result()
+        w *= 2
+
+    # -- sequential per-request baseline (no coalescing) ---------------------
+    seq_lat = []
+    t0 = time.monotonic()
+    for text in reqs:
+        t1 = time.monotonic()
+        backend.begin([text], topk).result()
+        seq_lat.append(time.monotonic() - t1)
+    seq_wall = time.monotonic() - t0
+    seq_qps = n_requests / seq_wall
+    seq_p50, seq_p99 = _percentiles(seq_lat)
+    emit("serve_sequential", seq_wall / n_requests * 1e6,
+         f"qps={seq_qps:.1f} p50={seq_p50:.2f}ms p99={seq_p99:.2f}ms")
+
+    # -- frontend QPS-vs-latency curve over submitter concurrency ------------
+    curve = []
+    for conc in CONCURRENCIES:
+        fe = ServeFrontend(backend, topk=topk, max_batch=max_batch,
+                           max_wait_ms=max_wait_ms, max_queue=256)
+        lat = [0.0] * n_requests
+        next_i = [0]
+        lock = threading.Lock()
+
+        def client():
+            while True:
+                with lock:
+                    i = next_i[0]
+                    if i >= n_requests:
+                        return
+                    next_i[0] += 1
+                t1 = time.monotonic()
+                fe.submit(reqs[i]).result()
+                lat[i] = time.monotonic() - t1
+
+        threads = [threading.Thread(target=client) for _ in range(conc)]
+        t0 = time.monotonic()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        wall = time.monotonic() - t0
+        stats = dict(fe.stats)
+        fe.close()
+        qps = n_requests / wall
+        p50, p99 = _percentiles(lat)
+        emit(f"serve_frontend_c{conc}", wall / n_requests * 1e6,
+             f"qps={qps:.1f} p50={p50:.2f}ms p99={p99:.2f}ms "
+             f"batches={stats['batches']} vs_seq={qps / seq_qps:.2f}x")
+        curve.append({"concurrency": conc, "qps": qps, "p50_ms": p50,
+                      "p99_ms": p99, "qps_vs_sequential": qps / seq_qps,
+                      "micro_batches": stats["batches"],
+                      "max_batch_seen": stats["max_batch_seen"],
+                      "accepted": stats["accepted"],
+                      "completed": stats["completed"]})
+
+    by_c = {r["concurrency"]: r for r in curve}
+    # structural: every accepted request completed, at every concurrency
+    completed_fraction = min(
+        r["completed"] / r["accepted"] for r in curve)
+    payload = {
+        "name": "bench_serve",
+        "shape": f"docs={n_docs} requests={n_requests} topk={topk} "
+                 f"max_batch={max_batch} max_wait_ms={max_wait_ms}",
+        "sequential": {"qps": seq_qps, "p50_ms": seq_p50,
+                       "p99_ms": seq_p99},
+        "curve": curve,
+        "headline": {
+            # micro-batching must beat the per-request baseline once
+            # there is real concurrency to coalesce (the ISSUE gate)
+            "qps_speedup_c4": by_c[4]["qps_vs_sequential"],
+            "qps_speedup_c8": by_c[8]["qps_vs_sequential"],
+            # a serial server would queue C=4 submitters ~4 deep: p99
+            # must stay under that serialized bound (higher = better)
+            "p99_headroom_c4": (4 * seq_p50) / by_c[4]["p99_ms"],
+            "completed_fraction": completed_fraction,
+        },
+    }
+    if out_json:
+        os.makedirs(os.path.dirname(out_json), exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump(payload, f, indent=2)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -34,7 +34,11 @@ def _multinode_metrics(payload):
            for r in payload["scaling"]}
     return {
         "w4_scaling_efficiency": eff[4],
+        "w4_pipelined_efficiency": {
+            r["workers"]: r["pipelined_scaling_efficiency"]
+            for r in payload["scaling"]}[4],
         "chunk_pipeline_overlap": payload["chunk_pipeline"]["overlap"],
+        "round_pipeline_overlap": payload["round_pipeline"]["overlap"],
     }
 
 
@@ -75,6 +79,21 @@ def _run_memory(out_json):
     return bench_memory.run(out_json=out_json)
 
 
+def _serve_metrics(payload):
+    return {
+        "serve_qps_speedup_c4": payload["headline"]["qps_speedup_c4"],
+        "serve_qps_speedup_c8": payload["headline"]["qps_speedup_c8"],
+        "serve_p99_headroom_c4": payload["headline"]["p99_headroom_c4"],
+        "serve_completed_fraction":
+            payload["headline"]["completed_fraction"],
+    }
+
+
+def _run_serve(out_json):
+    from benchmarks import bench_serve
+    return bench_serve.run(out_json=out_json)
+
+
 # baseline file -> (fresh-run fn, metric extractor).  Metrics are all
 # higher-is-better ratios.
 CHECKS = {
@@ -82,12 +101,14 @@ CHECKS = {
     "bench_multinode.json": (_run_multinode, _multinode_metrics),
     "bench_encode.json": (_run_encode, _encode_metrics),
     "bench_memory.json": (_run_memory, _memory_metrics),
+    "bench_serve.json": (_run_serve, _serve_metrics),
 }
 
 # Structural metrics are deterministic functions of the code (dispatch /
-# compile counts, not wall times): no noise allowance — any drop is a
-# regression.
-EXACT_METRICS = {"dispatch_reduction", "compile_reduction"}
+# compile counts, completed-request fractions — not wall times): no
+# noise allowance — any drop is a regression.
+EXACT_METRICS = {"dispatch_reduction", "compile_reduction",
+                 "serve_completed_fraction"}
 
 
 def main(argv=None) -> int:

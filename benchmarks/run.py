@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §7 index):
   multinode  ShardedSearchDriver scaling W=1,2,4 (+ results/*.json)
   dispatch  per-chunk streaming vs superchunk scan (+ results/*.json)
   encode   legacy per-batch padding vs bucketed pipeline (+ results/*.json)
+  serve    sequential per-request loop vs continuous-batching frontend
+           QPS/p50/p99 curve over submitter concurrency (+ results/*.json)
 
 ``run.py --check [--tol T]`` re-runs the JSON-emitting benches into a
 scratch dir and compares their key metrics against the committed
@@ -29,7 +31,8 @@ def main() -> None:
     from benchmarks import (bench_dispatch, bench_encode, bench_kernels,
                             bench_memory, bench_multinode,
                             bench_result_heap, bench_scaling,
-                            bench_search_backends, bench_ttfs)
+                            bench_search_backends, bench_serve,
+                            bench_ttfs)
     bench_result_heap.run()
     bench_scaling.run()
     bench_ttfs.run()
@@ -39,6 +42,7 @@ def main() -> None:
     bench_multinode.run()
     bench_dispatch.run()
     bench_encode.run()
+    bench_serve.run()
 
 
 if __name__ == "__main__":

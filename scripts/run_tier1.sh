@@ -19,6 +19,13 @@ python -m repro.launch.evalsuite --smoke \
 test -s "$EVALSUITE_TMP/results/evalsuite.json"
 rm -rf "$EVALSUITE_TMP"
 
+echo "== serve smoke (continuous-batching frontend, warm pass + steady state) =="
+SERVE_TMP="$(mktemp -d)"
+python -m repro.launch.serve --smoke --data-dir "$SERVE_TMP/data" \
+  --n-requests 4 --batch 3 --concurrency 2 --workers 1 \
+  --max-batch 8 --max-wait-ms 2
+rm -rf "$SERVE_TMP"
+
 # Optional perf gate: re-run the JSON-recording benches and compare
 # against the committed results/*.json baselines (relative metrics,
 # tolerance for container noise).  Off by default — timing on shared CI

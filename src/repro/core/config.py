@@ -101,6 +101,45 @@ class EvaluationArguments:
     # Windows of text tokenized ahead of the device encode stage
     # (bounded queue depth; 0 = tokenize synchronously).
     encode_pipeline_depth: int = 2
+    # Continuous-batching serve frontend defaults (core.serving): a
+    # micro-batch flushes at serve_max_batch coalesced queries or after
+    # serve_max_wait_ms from its first request, whichever first;
+    # serve_max_queue bounds pending requests (admission control —
+    # submissions beyond it fast-fail with ServeOverloadError).
+    serve_max_batch: int = 32
+    serve_max_wait_ms: float = 2.0
+    serve_max_queue: int = 256
+
+    def __post_init__(self):
+        # Validate at construction (satellite of ISSUE 7): a bad knob
+        # used to surface only deep in the call stack — unknown
+        # score_impl at the first scored chunk, topk=0 as a lax.top_k
+        # shape error mid-search.
+        from repro.core.result_heap import FastResultHeapq
+        from repro.core.sharded_search import SCORE_BACKENDS
+        if self.score_impl not in SCORE_BACKENDS:
+            raise ValueError(
+                f"unknown score_impl {self.score_impl!r}; expected one "
+                f"of {sorted(SCORE_BACKENDS)}")
+        if self.heap_impl not in FastResultHeapq.HEAP_IMPLS:
+            raise ValueError(
+                f"unknown heap_impl {self.heap_impl!r}; expected one "
+                f"of {list(FastResultHeapq.HEAP_IMPLS)}")
+        for name, floor in (("topk", 1), ("encode_batch_size", 1),
+                            ("query_batch_size", 1),
+                            ("superchunk_size", 0),
+                            ("superchunk_max_mb", 1),
+                            ("encode_buckets", 0),
+                            ("tokenizer_workers", 0),
+                            ("encode_pipeline_depth", 0),
+                            ("serve_max_batch", 1),
+                            ("serve_max_queue", 1)):
+            if getattr(self, name) < floor:
+                raise ValueError(
+                    f"{name} must be >= {floor}, got {getattr(self, name)}")
+        if self.serve_max_wait_ms < 0:
+            raise ValueError(f"serve_max_wait_ms must be >= 0, got "
+                             f"{self.serve_max_wait_ms}")
 
 
 def parse_cli(*arg_classes, argv: Sequence[str] | None = None):

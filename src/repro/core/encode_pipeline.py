@@ -148,20 +148,26 @@ class EncodePipeline:
                 return rung
         return ladder[-1]
 
-    def _batch_dim(self, n: int, batch_size: int) -> int:
+    def _batch_dim(self, n: int, batch_size: int,
+                   min_batch: int = 8) -> int:
         """Fixed batch dim: ``batch_size`` once the input covers it; a
         power-of-two below it for one-shot small inputs (still a bounded
-        shape set — log2(batch_size) dims at most)."""
+        shape set — log2(batch_size) dims at most).  ``min_batch`` is the
+        floor of that power-of-two ladder: the serve frontend passes 1 so
+        a deadline-flushed single query encodes as (1, L) instead of
+        padding to (8, L) — batch rows beyond ``n`` are exact-zero
+        masked either way, so the choice never changes output rows."""
         if n >= batch_size:
             return batch_size
-        b = min(8, batch_size)
+        b = max(1, min(min_batch, batch_size))
         while b < n:
             b <<= 1
         return min(b, batch_size)
 
     # -- stage 3: donated device encode ---------------------------------------
     def _encode_window(self, params, enc: list[list[int]], max_len: int,
-                       device: bool, batch_size: int):
+                       device: bool, batch_size: int,
+                       min_batch_dim: int = 8):
         """Encode one window of token rows; output rows restored to the
         window's original order (device- or host-resident)."""
         n = len(enc)
@@ -169,7 +175,7 @@ class EncodePipeline:
             return (jnp.empty((0, 0), jnp.float32) if device
                     else np.empty((0, 0), np.float32))
         ladder = self.ladder(max_len)
-        b = self._batch_dim(n, batch_size)
+        b = self._batch_dim(n, batch_size, min_batch_dim)
         lengths = np.fromiter((len(e) for e in enc), np.int64, count=n)
         order = np.argsort(lengths, kind="stable")
         parts, perm = [], []
@@ -195,11 +201,18 @@ class EncodePipeline:
     # -- public API -----------------------------------------------------------
     def encode(self, params, texts: Sequence[str], max_len: int, *,
                fmt: Callable[[str], str] | None = None,
-               device: bool = False, batch_size: int | None = None):
-        """One-shot ordered encode of ``texts`` -> (N, d)."""
+               device: bool = False, batch_size: int | None = None,
+               min_batch_dim: int = 8):
+        """One-shot ordered encode of ``texts`` -> (N, d).
+
+        ``min_batch_dim`` floors the power-of-two batch-dim ladder for
+        inputs smaller than ``batch_size`` (see :meth:`_batch_dim`); the
+        serve frontend passes 1 to keep single-query micro-batch latency
+        proportional to one row, not eight."""
         enc = self.tokenize(texts, max_len, fmt)
         return self._encode_window(params, enc, max_len, device,
-                                   batch_size or self.batch_size)
+                                   batch_size or self.batch_size,
+                                   min_batch_dim)
 
     def stream(self, params, texts: Sequence[str], *, lo: int, hi: int,
                chunk_size: int, max_len: int,

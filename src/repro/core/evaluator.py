@@ -99,6 +99,33 @@ def format_metrics_table(results: dict[str, dict]) -> str:
     return out
 
 
+class PreparedCorpus:
+    """A corpus resolved once for repeated searches (serving regime).
+
+    Bundles what :meth:`RetrievalEvaluator.search` used to recompute per
+    call: the corpus id hashes, the sized object the FairSharder
+    partitions positionally, and the chunk loader (mmap plan / encode
+    pipeline / device-resident slices) the driver streams.
+    """
+
+    __slots__ = ("hashes", "n_docs", "load_chunk", "sized")
+
+    def __init__(self, hashes: np.ndarray, n_docs: int, load_chunk,
+                 sized=None):
+        self.hashes = hashes
+        self.n_docs = n_docs
+        self.load_chunk = load_chunk
+        self.sized = n_docs if sized is None else sized
+
+    def __len__(self) -> int:
+        return self.n_docs
+
+    def positions_to_ids(self, pos: np.ndarray) -> np.ndarray:
+        """Map the driver's int32 global positions to 63-bit id hashes
+        on the host (-1 marks empty slots)."""
+        return np.where(pos >= 0, self.hashes[np.clip(pos, 0, None)], -1)
+
+
 class RetrievalEvaluator:
     def __init__(self, args: EvaluationArguments, retriever, collator,
                  params, mesh=None,
@@ -162,9 +189,13 @@ class RetrievalEvaluator:
 
     def _encode_texts(self, texts: Sequence[str], is_query: bool,
                       max_len: int | None = None,
-                      device: bool = False):
+                      device: bool = False,
+                      min_batch_dim: int = 8):
         """Encode texts; ``device=True`` keeps the result device-resident
-        (no per-chunk host round-trip) for the device score backends."""
+        (no per-chunk host round-trip) for the device score backends.
+        ``min_batch_dim`` floors the pipeline's small-input batch dim
+        (the serve frontend passes 1 for latency-proportional
+        micro-batches; ignored on the legacy loop)."""
         fmt = (self.retriever.format_query if is_query
                else self.retriever.format_passage)
         bs = (self.args.query_batch_size if is_query
@@ -176,7 +207,7 @@ class RetrievalEvaluator:
         if self.encode_pipeline is not None:
             return self.encode_pipeline.encode(
                 self.params, list(texts), max_len, fmt=fmt, device=device,
-                batch_size=bs)
+                batch_size=bs, min_batch_dim=min_batch_dim)
         out = []
         for lo in range(0, len(texts), bs):
             chunk = [fmt(t) for t in texts[lo: lo + bs]]
@@ -244,27 +275,51 @@ class RetrievalEvaluator:
         return np.asarray(self._corpus_view(corpus).id_hashes)
 
     # -- search ----------------------------------------------------------------
-    def search(self, queries, corpus, topk: int | None = None,
-               cache: EmbeddingCache | None = None):
-        """Dense retrieval: -> (qid_hashes, doc_id_hashes (Q,k), scores).
+    def make_driver(self) -> ShardedSearchDriver:
+        """This evaluator's :class:`ShardedSearchDriver` instantiation —
+        the one thin object every search entry point (and the serve
+        frontend, which keeps a persistent driver for round-pipelined
+        micro-batches) is built on."""
+        return ShardedSearchDriver(
+            n_workers=self.process_count, worker_index=self.process_index,
+            sharder=self.sharder, score_impl=self.args.score_impl,
+            heap_impl=self.args.heap_impl,
+            chunk_size=self.args.encode_batch_size,
+            prefetch=self.args.async_prefetch, gather=self.gather,
+            superchunk_size=self.args.superchunk_size,
+            superchunk_max_mb=self.args.superchunk_max_mb)
 
-        ``queries`` and ``corpus`` are ``{raw_id: text}`` dicts or any
-        lazy :class:`~repro.data.views.DatasetView` composition (filter /
-        map / select / concat / interleave) — views stream per chunk
-        through the driver, so e.g. a ``ConcatView`` corpus is scored
-        without the combined corpus ever existing in memory.
+    def prepare_corpus(self, corpus, cache: EmbeddingCache | None = None,
+                       *, device_resident: bool = False) -> "PreparedCorpus":
+        """Resolve a corpus ONCE for repeated searches against it.
 
-        Device-side top-k tracks int32 global corpus *positions*; they are
-        mapped back to id hashes here on the host (JAX is 32-bit by
-        default — 63-bit hashes would truncate on device).
+        Returns a :class:`PreparedCorpus` bundling the id hashes, the
+        document count, and the chunk loader the driver streams — the
+        cached-corpus ``row_plan``, the online encode-pipeline chunk
+        source, or the encode-with-cache fallback, exactly as
+        :meth:`search` used to resolve per call.  The serve frontend
+        prepares once at startup so per-request work is only
+        encode+score+merge.
+
+        ``device_resident=True`` additionally materializes the corpus
+        embeddings as one array living where scoring happens (device for
+        the device backends, host for ``numpy``): chunk loads become
+        zero-copy slices — no per-request mmap reads or encode. Encoding
+        (and cache warm-up) happens here, so construction is the
+        expensive pass.
         """
-        topk = topk or self.args.topk
         on_device = self.args.score_impl != "numpy"
-        q_view = self._corpus_view(queries)
-        q_emb = self._encode_texts(q_view.texts(), True, device=on_device)
         corpus_v = self._corpus_view(corpus)
         corpus_texts = corpus_v.texts()
         all_hashes = np.asarray(corpus_v.id_hashes)
+        n_docs = len(corpus_v)
+
+        if device_resident:
+            embs = self.encode_corpus(all_hashes, corpus_texts, cache)
+            arr = jnp.asarray(embs, jnp.float32) if on_device \
+                else np.asarray(embs, np.float32)
+            return PreparedCorpus(all_hashes, n_docs,
+                                  lambda lo, hi: arr[lo:hi])
 
         # cached-corpus plan: when the cache already covers the corpus,
         # resolve the position->row mapping ONCE (or skip it entirely if
@@ -300,22 +355,54 @@ class RetrievalEvaluator:
                 return self.encode_corpus(
                     all_hashes[lo:hi], corpus_texts[lo:hi], cache,
                     device=on_device)
+        return PreparedCorpus(all_hashes, n_docs, load_chunk,
+                              sized=corpus_v)
 
-        # the evaluator is a thin instantiation of the sharded driver:
-        # same code path for 1 process or W (paper: same script, any
-        # number of nodes)
-        driver = ShardedSearchDriver(
-            n_workers=self.process_count, worker_index=self.process_index,
-            sharder=self.sharder, score_impl=self.args.score_impl,
-            heap_impl=self.args.heap_impl,
-            chunk_size=self.args.encode_batch_size,
-            prefetch=self.args.async_prefetch, gather=self.gather,
-            superchunk_size=self.args.superchunk_size,
-            superchunk_max_mb=self.args.superchunk_max_mb)
-        vals, pos = driver.search(q_emb, corpus_v, load_chunk, topk)
-        ids = np.where(pos >= 0, all_hashes[np.clip(pos, 0, None)], -1)
-        q_hashes = np.asarray(q_view.id_hashes)
-        return q_hashes, ids, vals
+    def search_prepared(self, queries, prepared: "PreparedCorpus",
+                        topk: int | None = None):
+        """:meth:`search` against an already-prepared corpus."""
+        topk = topk or self.args.topk
+        on_device = self.args.score_impl != "numpy"
+        q_view = self._corpus_view(queries)
+        q_emb = self._encode_texts(q_view.texts(), True, device=on_device)
+        driver = self.make_driver()
+        vals, pos = driver.search(q_emb, prepared.sized, prepared.load_chunk,
+                                  topk)
+        return (np.asarray(q_view.id_hashes),
+                prepared.positions_to_ids(pos), vals)
+
+    def search_texts(self, texts: Sequence[str],
+                     prepared: "PreparedCorpus", topk: int | None = None,
+                     min_batch_dim: int = 8):
+        """Raw-text query search against a prepared corpus — the serve
+        backends' entry point (no query-id hashing; requests demux by
+        position).  Returns ``(doc_id_hashes (Q, k), scores (Q, k))``."""
+        topk = topk or self.args.topk
+        on_device = self.args.score_impl != "numpy"
+        q_emb = self._encode_texts(list(texts), True, device=on_device,
+                                   min_batch_dim=min_batch_dim)
+        driver = self.make_driver()
+        vals, pos = driver.search(q_emb, prepared.sized, prepared.load_chunk,
+                                  topk)
+        return prepared.positions_to_ids(pos), vals
+
+    def search(self, queries, corpus, topk: int | None = None,
+               cache: EmbeddingCache | None = None):
+        """Dense retrieval: -> (qid_hashes, doc_id_hashes (Q,k), scores).
+
+        ``queries`` and ``corpus`` are ``{raw_id: text}`` dicts or any
+        lazy :class:`~repro.data.views.DatasetView` composition (filter /
+        map / select / concat / interleave) — views stream per chunk
+        through the driver, so e.g. a ``ConcatView`` corpus is scored
+        without the combined corpus ever existing in memory.
+
+        Device-side top-k tracks int32 global corpus *positions*; they are
+        mapped back to id hashes here on the host (JAX is 32-bit by
+        default — 63-bit hashes would truncate on device).
+        """
+        return self.search_prepared(queries,
+                                    self.prepare_corpus(corpus, cache),
+                                    topk)
 
     # -- public API ---------------------------------------------------------------
     def evaluate(self, queries, corpus,

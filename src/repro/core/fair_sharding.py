@@ -25,11 +25,22 @@ keep computing identical bounds.
 from __future__ import annotations
 
 import threading
+import time
 
 import numpy as np
 
 
+class ShardAborted(RuntimeError):
+    """A sibling worker died mid-round; this worker's wait was released.
+    Secondary casualty — cluster runners filter it in favor of the
+    original error (like ``threading.BrokenBarrierError``)."""
+
+
 class FairSharder:
+    # acquire_bounds gives up after this long waiting for the previous
+    # round to commit — a missing sibling report means a worker died
+    ACQUIRE_TIMEOUT_S = 300.0
+
     def __init__(self, n_workers: int, alpha: float = 0.5,
                  min_share: float = 0.01):
         self.n = n_workers
@@ -40,6 +51,10 @@ class FairSharder:
         # with no timing signal, e.g. an empty shard)
         self._pending: dict[int, float | None] = {}
         self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._committed = 0                  # rounds folded into the EMA
+        self._issued = [0] * n_workers       # rounds begun, per worker
+        self._abort_exc: BaseException | None = None
 
     def shares(self, total_items: int) -> list[int]:
         """Split ``total_items`` proportionally to throughput.
@@ -76,6 +91,51 @@ class FairSharder:
         starts = ends - sizes
         return list(zip(starts.tolist(), ends.tolist()))
 
+    def acquire_bounds(self, worker: int,
+                       total_items: int) -> list[tuple[int, int]]:
+        """Round-versioned :meth:`bounds` for pipelined multi-round use.
+
+        A worker's r-th call blocks until rounds ``0..r-1`` have all
+        committed, so every worker reads the *same* EMA state for the
+        same logical round.  The plain ``bounds()`` read is only safe
+        when something else already orders rounds across workers (the
+        sync path's gather barrier); with ``search_async`` a fast
+        worker's report can commit a round *between* two workers'
+        partition reads for the next one, silently splitting the corpus
+        two different ways in a single round.
+
+        Never blocks when rounds are already ordered (sync path, or
+        ``n == 1``) — the wait condition is satisfied on entry.
+        """
+        with self._cv:
+            r = self._issued[worker]
+            self._issued[worker] += 1
+            deadline = time.monotonic() + self.ACQUIRE_TIMEOUT_S
+            while self._committed < r and self._abort_exc is None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise RuntimeError(
+                        f"worker {worker} waited {self.ACQUIRE_TIMEOUT_S}"
+                        f"s for round {r - 1} to commit "
+                        f"({self._committed} committed) — a sibling "
+                        f"worker likely died before reporting")
+                self._cv.wait(remaining)
+            if self._abort_exc is not None:
+                raise ShardAborted("sharder aborted: a sibling worker "
+                                   "died mid-round") from self._abort_exc
+        # safe outside the lock: round r cannot commit (and move the
+        # EMA) until THIS worker reports it, which happens only after
+        # the caller scores the slice these bounds describe
+        return self.bounds(total_items)
+
+    def abort(self, exc: BaseException | None = None) -> None:
+        """Release workers blocked in :meth:`acquire_bounds` when a
+        sibling dies mid-round (mirrors the gather transports' abort)."""
+        with self._cv:
+            self._abort_exc = exc if exc is not None else RuntimeError(
+                "aborted")
+            self._cv.notify_all()
+
     def update(self, worker: int, items: int, seconds: float):
         """Report one worker's round observation.
 
@@ -99,3 +159,5 @@ class FairSharder:
                         self.alpha * obs
                         + (1 - self.alpha) * self.throughput[wk])
             self._pending.clear()
+            self._committed += 1
+            self._cv.notify_all()

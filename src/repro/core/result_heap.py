@@ -73,7 +73,19 @@ class FastResultHeapq:
     without this the impls would diverge on under-filled heaps.)
     """
 
+    HEAP_IMPLS = ("python", "jax", "pallas")
+
     def __init__(self, n_queries: int, k: int, impl: str = "jax"):
+        # fail at construction, not deep in a search round: an unknown
+        # impl used to silently run the jax path, and k < 1 only
+        # surfaced as a shape error inside lax.top_k
+        if impl not in self.HEAP_IMPLS:
+            raise ValueError(f"unknown heap impl {impl!r}; expected one "
+                             f"of {list(self.HEAP_IMPLS)}")
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        if n_queries < 0:
+            raise ValueError(f"n_queries must be >= 0, got {n_queries}")
         self.k = k
         self.n_queries = n_queries
         self.impl = impl

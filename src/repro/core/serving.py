@@ -1,0 +1,421 @@
+"""Continuous-batching serve frontend (ROADMAP item 1, DS SERVE-style).
+
+``launch.serve`` used to be an offline batch loop over pre-made
+requests; this module is the real online frontend behind it:
+
+  * **admission** — :meth:`ServeFrontend.submit` accepts concurrent
+    single-query (or small-batch) requests onto a bounded queue and
+    returns a Future.  When the queue is full the submit fast-fails
+    with :class:`ServeOverloadError` (the 503 path) instead of letting
+    latency grow without bound; once accepted, a request is never
+    dropped — overload, shutdown, and backend errors all resolve its
+    Future (result or exception).
+  * **adaptive micro-batching** — a dispatcher thread coalesces queued
+    requests into one micro-batch, flushing at ``max_batch`` coalesced
+    queries or ``max_wait_ms`` after the batch's first request,
+    whichever comes first — so a lone query pays at most the deadline,
+    and a burst amortizes encode+score over the whole batch.
+  * **batched execute, per-request demux** — the coalesced texts encode
+    through the bucketed :class:`~repro.core.encode_pipeline.
+    EncodePipeline` at its smallest viable rung (length rung covering
+    the batch, power-of-two batch dim floored at 1) and score against
+    the prepared (device-resident) corpus via the driver's superchunk
+    executor; the merged ``(ids, scores)`` rows split back to each
+    request's Future by position.  Requests never share ids — demux is
+    positional — so concurrent clients may reuse query ids freely.
+  * **round pipelining** — with the :class:`EvaluatorServeBackend`,
+    micro-batch ``r``'s shard merge/finalize runs on the driver's
+    reduce thread (``ShardedSearchDriver.search_async``) while the
+    dispatcher already encodes and scores micro-batch ``r + 1``.  Each
+    in-flight micro-batch owns a fresh ``FastResultHeapq`` state, so
+    donated device buffers are never shared across concurrent requests.
+  * **clean shutdown** — :meth:`close` stops admission, drains every
+    queued request through the normal batch path, joins the dispatcher
+    and the backend's reduce thread, and only then returns.
+
+Backends: :class:`EvaluatorServeBackend` (one evaluator — single node
+or one rank of a real ``jax.distributed`` cluster — with a persistent
+driver and a :class:`~repro.core.evaluator.PreparedCorpus`) and
+:class:`ClusterServeBackend` (W real evaluators through
+``SimulatedCluster``, the zero-code-change multi-worker path of
+``launch.serve --workers N``).  Results are bitwise-identical to solo
+``RetrievalEvaluator.search`` calls per query (tests pin the
+``score_impl`` × W matrix).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+class ServeError(RuntimeError):
+    """Base class for serve-frontend errors."""
+
+
+class ServeOverloadError(ServeError):
+    """Admission control rejected the request (queue full — the
+    503-style fast-fail; resubmit with backoff)."""
+
+
+class ServeClosedError(ServeError):
+    """The frontend is shut down (or shutting down) and accepts no new
+    requests."""
+
+
+class _Request:
+    __slots__ = ("texts", "n", "future", "t_submit")
+
+    def __init__(self, texts: list[str]):
+        self.texts = texts
+        self.n = len(texts)
+        self.future: Future = Future()
+        self.t_submit = time.monotonic()
+
+
+_SENTINEL = object()
+
+
+# -- backends -----------------------------------------------------------------
+
+
+class EvaluatorServeBackend:
+    """One evaluator, one persistent driver, one prepared corpus.
+
+    ``begin(texts, topk)`` encodes the micro-batch (smallest viable
+    bucket rung, batch-dim floor 1), runs the scoring phase inline on
+    the dispatcher thread, and hands the reduce (merge + finalize +
+    position→id mapping) to the driver's background reduce thread —
+    returning a Future so the dispatcher can start the next
+    micro-batch's encode/score while this one merges.
+    """
+
+    def __init__(self, evaluator, corpus, cache=None, *,
+                 device_resident: bool = True, min_batch_dim: int = 1):
+        self.ev = evaluator
+        self.min_batch_dim = min_batch_dim
+        self.on_device = evaluator.args.score_impl != "numpy"
+        # the expensive pass: corpus encode / cache warm-up, once
+        self.prepared = evaluator.prepare_corpus(
+            corpus, cache=cache, device_resident=device_resident)
+        self.driver = evaluator.make_driver()
+
+    def begin(self, texts: Sequence[str], topk: int) -> Future:
+        q_emb = self.ev._encode_texts(list(texts), True,
+                                      device=self.on_device,
+                                      min_batch_dim=self.min_batch_dim)
+        inner = self.driver.search_async(q_emb, self.prepared.sized,
+                                         self.prepared.load_chunk, topk)
+        outer: Future = Future()
+
+        def _done(f: Future) -> None:
+            try:
+                vals, pos = f.result()
+                outer.set_result(
+                    (self.prepared.positions_to_ids(pos), vals))
+            except BaseException as exc:   # noqa: BLE001 — routed to caller
+                outer.set_exception(exc)
+
+        inner.add_done_callback(_done)
+        return outer
+
+    def close(self) -> None:
+        self.driver.close()
+
+
+class ClusterServeBackend:
+    """W real evaluators in one process (``SimulatedCluster``) — the
+    ``launch.serve --workers N`` path.  Each micro-batch runs one full
+    sharded round: every rank scores its fair shard and merges through
+    the in-memory all-gather; rank 0's (identical) result is returned.
+    """
+
+    def __init__(self, evaluators, cluster, corpus, caches=None, *,
+                 device_resident: bool = True, min_batch_dim: int = 1):
+        if len(evaluators) != cluster.world_size:
+            raise ValueError(
+                f"{len(evaluators)} evaluators for a world of "
+                f"{cluster.world_size}")
+        self.evs = list(evaluators)
+        self.cluster = cluster
+        self.min_batch_dim = min_batch_dim
+        caches = caches if caches is not None else [None] * len(self.evs)
+        self.prepared = [
+            ev.prepare_corpus(corpus, cache=c,
+                              device_resident=device_resident)
+            for ev, c in zip(self.evs, caches)]
+
+    def run(self, texts: Sequence[str], topk: int):
+        outs = self.cluster.run(
+            lambda rank: self.evs[rank].search_texts(
+                texts, self.prepared[rank], topk,
+                min_batch_dim=self.min_batch_dim))
+        return outs[0]
+
+
+# -- the frontend -------------------------------------------------------------
+
+
+class ServeFrontend:
+    """Queue + dispatcher turning concurrent requests into micro-batches.
+
+    Parameters
+    ----------
+    backend : object with ``begin(texts, topk) -> Future[(ids, scores)]``
+        (pipelined) or ``run(texts, topk) -> (ids, scores)`` (synchronous),
+        e.g. :class:`EvaluatorServeBackend` / :class:`ClusterServeBackend`,
+        or any callable for tests.
+    topk : results per query.
+    max_batch : flush when this many queries have coalesced.
+    max_wait_ms : flush this long after a batch's first request even if
+        under ``max_batch`` (0 = never wait: each flush takes whatever
+        is already queued).
+    max_queue : pending-request bound (admission control).
+    """
+
+    def __init__(self, backend, *, topk: int = 10, max_batch: int = 32,
+                 max_wait_ms: float = 2.0, max_queue: int = 256):
+        if topk < 1:
+            raise ValueError(f"topk must be >= 1, got {topk}")
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_wait_ms < 0:
+            raise ValueError(
+                f"max_wait_ms must be >= 0, got {max_wait_ms}")
+        if max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if not (callable(backend) or hasattr(backend, "begin")
+                or hasattr(backend, "run")):
+            raise ValueError(
+                "backend must expose begin(texts, topk) or "
+                "run(texts, topk), or be callable")
+        self.backend = backend
+        self.topk = topk
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_ms / 1e3
+        self.stats = {"accepted": 0, "rejected": 0, "completed": 0,
+                      "failed": 0, "batches": 0, "queries": 0,
+                      "flush_full": 0, "flush_deadline": 0,
+                      "flush_drain": 0, "max_batch_seen": 0}
+        self._queue: queue.Queue = queue.Queue(maxsize=max_queue)
+        self._carry: _Request | None = None
+        self._lock = threading.Lock()
+        self._closed = False
+        self._thread = threading.Thread(target=self._loop,
+                                        name="serve-dispatch", daemon=True)
+        self._thread.start()
+
+    # -- classmethod constructors ---------------------------------------------
+    @classmethod
+    def from_evaluator(cls, evaluator, corpus, cache=None, *,
+                       topk: int | None = None,
+                       max_batch: int | None = None,
+                       max_wait_ms: float | None = None,
+                       max_queue: int | None = None,
+                       device_resident: bool = True) -> "ServeFrontend":
+        """Frontend over one evaluator (knob defaults come from its
+        ``EvaluationArguments.serve_*`` / ``topk`` fields)."""
+        a = evaluator.args
+        return cls(
+            EvaluatorServeBackend(evaluator, corpus, cache,
+                                  device_resident=device_resident),
+            topk=a.topk if topk is None else topk,
+            max_batch=a.serve_max_batch if max_batch is None else max_batch,
+            max_wait_ms=(a.serve_max_wait_ms if max_wait_ms is None
+                         else max_wait_ms),
+            max_queue=a.serve_max_queue if max_queue is None else max_queue)
+
+    @classmethod
+    def from_cluster(cls, evaluators, cluster, corpus, caches=None, *,
+                     topk: int | None = None,
+                     max_batch: int | None = None,
+                     max_wait_ms: float | None = None,
+                     max_queue: int | None = None,
+                     device_resident: bool = True) -> "ServeFrontend":
+        """Frontend over W simulated workers (``launch.serve
+        --workers N``); knob defaults from rank 0's arguments."""
+        a = evaluators[0].args
+        return cls(
+            ClusterServeBackend(evaluators, cluster, corpus, caches,
+                                device_resident=device_resident),
+            topk=a.topk if topk is None else topk,
+            max_batch=a.serve_max_batch if max_batch is None else max_batch,
+            max_wait_ms=(a.serve_max_wait_ms if max_wait_ms is None
+                         else max_wait_ms),
+            max_queue=a.serve_max_queue if max_queue is None else max_queue)
+
+    # -- request admission ----------------------------------------------------
+    def submit(self, request) -> Future:
+        """Accept one request — a single query text, a sequence of
+        texts, or an ``{id: text}`` dict — and return a Future resolving
+        to ``(doc_id_hashes (q, topk), scores (q, topk))`` with one row
+        per query, in request order.
+
+        Raises :class:`ServeOverloadError` when the queue is full and
+        :class:`ServeClosedError` after :meth:`close`.
+        """
+        if isinstance(request, str):
+            texts = [request]
+        elif isinstance(request, dict):
+            texts = list(request.values())
+        else:
+            texts = list(request)
+        if not texts:
+            raise ValueError("empty request")
+        if len(texts) > self.max_batch:
+            raise ValueError(
+                f"request of {len(texts)} queries exceeds max_batch="
+                f"{self.max_batch}")
+        req = _Request(texts)
+        with self._lock:
+            if self._closed:
+                raise ServeClosedError("frontend is closed")
+            try:
+                self._queue.put_nowait(req)
+            except queue.Full:
+                self.stats["rejected"] += 1
+                raise ServeOverloadError(
+                    f"queue full ({self._queue.maxsize} pending "
+                    f"requests); retry with backoff") from None
+            self.stats["accepted"] += 1
+        return req.future
+
+    def search(self, request, timeout: float | None = None):
+        """Blocking convenience wrapper: submit + wait."""
+        return self.submit(request).result(timeout)
+
+    # -- dispatcher -----------------------------------------------------------
+    def _collect(self) -> tuple[list[_Request], str | None, bool]:
+        """Block for the next micro-batch.  Returns ``(batch, flush
+        reason, stop)``; an empty batch with ``stop`` means shutdown."""
+        if self._carry is not None:
+            first, self._carry = self._carry, None
+        else:
+            first = self._queue.get()
+            if first is _SENTINEL:
+                return [], None, True
+        batch, n = [first], first.n
+        deadline = time.monotonic() + self.max_wait_s
+        reason = "full"
+        while n < self.max_batch:
+            timeout = deadline - time.monotonic()
+            try:
+                nxt = (self._queue.get(timeout=timeout) if timeout > 0
+                       else self._queue.get_nowait())
+            except queue.Empty:
+                reason = "deadline"
+                break
+            if nxt is _SENTINEL:
+                return batch, "drain", True
+            if n + nxt.n > self.max_batch:
+                self._carry = nxt          # keeps arrival order intact
+                break
+            batch.append(nxt)
+            n += nxt.n
+        return batch, reason, False
+
+    def _loop(self) -> None:
+        while True:
+            batch, reason, stop = self._collect()
+            if batch:
+                self._dispatch(batch, reason)
+            if stop:
+                if self._carry is not None:
+                    carry, self._carry = self._carry, None
+                    self._dispatch([carry], "drain")
+                return
+
+    def _dispatch(self, batch: list[_Request], reason: str) -> None:
+        texts = [t for req in batch for t in req.texts]
+        n_real = len(texts)
+        # pad the micro-batch to its power-of-two rung (demux below only
+        # reads the real rows): encode AND the scoring executor are
+        # jit-keyed on the query count, so without this every distinct
+        # coalesced size would recompile in steady state — with it the
+        # compile set is the rung ladder {1, 2, 4, ..., 2^ceil(log2
+        # max_batch)}, all warmable up front
+        rung = 1
+        while rung < n_real:
+            rung *= 2
+        texts = texts + [texts[0]] * (rung - n_real)
+        with self._lock:
+            self.stats["batches"] += 1
+            self.stats["queries"] += n_real
+            self.stats[f"flush_{reason}"] += 1
+            self.stats["max_batch_seen"] = max(
+                self.stats["max_batch_seen"], n_real)
+        begin = getattr(self.backend, "begin", None)
+        try:
+            if begin is not None:
+                # pipelined: scoring ran inline; merge/demux complete on
+                # the backend's reduce thread while we collect the next
+                # micro-batch
+                fut = begin(texts, self.topk)
+                fut.add_done_callback(
+                    lambda f, b=batch: self._demux(b, f))
+            else:
+                run = getattr(self.backend, "run", self.backend)
+                ids, scores = run(texts, self.topk)
+                self._finish(batch, ids, scores)
+        except BaseException as exc:       # noqa: BLE001 — routed to futures
+            self._fail(batch, exc)
+
+    def _demux(self, batch: list[_Request], fut: Future) -> None:
+        try:
+            ids, scores = fut.result()
+        except BaseException as exc:       # noqa: BLE001 — routed to futures
+            self._fail(batch, exc)
+            return
+        self._finish(batch, ids, scores)
+
+    def _finish(self, batch: list[_Request], ids, scores) -> None:
+        ids = np.asarray(ids)
+        scores = np.asarray(scores)
+        off = 0
+        for req in batch:
+            try:
+                req.future.set_result((ids[off: off + req.n],
+                                       scores[off: off + req.n]))
+            except Exception:              # cancelled by the caller
+                pass
+            off += req.n
+        with self._lock:
+            self.stats["completed"] += len(batch)
+
+    def _fail(self, batch: list[_Request], exc: BaseException) -> None:
+        for req in batch:
+            try:
+                req.future.set_exception(exc)
+            except Exception:              # cancelled by the caller
+                pass
+        with self._lock:
+            self.stats["failed"] += len(batch)
+
+    # -- shutdown -------------------------------------------------------------
+    def close(self) -> None:
+        """Stop admission, drain every queued request, join the
+        dispatcher and the backend's reduce thread.  Every accepted
+        Future is resolved when this returns.  Idempotent."""
+        with self._lock:
+            already = self._closed
+            self._closed = True
+        if not already:
+            # the sentinel lands after every accepted request (submit
+            # holds the lock and refuses once _closed), so the
+            # dispatcher drains everything first
+            self._queue.put(_SENTINEL)
+        self._thread.join()
+        close_backend = getattr(self.backend, "close", None)
+        if close_backend is not None:
+            close_backend()
+
+    def __enter__(self) -> "ServeFrontend":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import math
 import time
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Callable, Protocol, runtime_checkable
 
 import jax
@@ -289,6 +289,9 @@ class ShardedSearchDriver:
         self.superchunk_max_mb = superchunk_max_mb
         # per-round observability (bench_multinode, serve logging)
         self.stats: dict = {}
+        # lazy single-thread executor for search_async reduces; one
+        # thread serializes merges in submission order (determinism)
+        self._reduce_pool: ThreadPoolExecutor | None = None
 
     # -- coordinator ----------------------------------------------------------
     def partition(self, n_docs) -> list[tuple[int, int]]:
@@ -424,19 +427,28 @@ class ShardedSearchDriver:
         heap.adopt_state(state_v[:n_q], state_i[:n_q])
         return dispatches
 
-    def search(self, q_emb, n_docs, load_chunk: ChunkLoader,
-               topk: int):
-        """Run this worker's encode→score→local-top-k round, then reduce.
-
-        ``n_docs`` may be an int or a sized corpus object (e.g. a lazy
-        ``DatasetView``) — the FairSharder partitions it positionally.
-        Returns the merged ``(scores (Q, k), positions (Q, k))`` —
-        identical on every worker when a gather transport is set.
-        Positions are global corpus offsets; ``-1`` marks empty slots.
-        """
+    def _score_local(self, q_emb, n_docs, load_chunk: ChunkLoader,
+                     topk: int) -> FastResultHeapq:
+        """The scoring phase of one round: stream this worker's shard
+        slice into a **fresh** local (Q, k) heap and report the round's
+        throughput observation.  Every call builds its own
+        ``FastResultHeapq`` — donated device buffers are never shared
+        between rounds, so a previous round's state may still be merging
+        (``search_async``) while this round scores."""
         n_queries = q_emb.shape[0]
         heap = FastResultHeapq(n_queries, topk, impl=self.heap_impl)
-        lo, hi = self.partition(n_docs)[self.worker_index]
+        if not isinstance(n_docs, (int, np.integer)):
+            n_docs = len(n_docs)
+        if self.n_workers > 1:
+            # round-versioned partition: with async reduces, workers'
+            # scoring phases are no longer barrier-ordered, so a plain
+            # bounds() read could straddle an EMA commit and split the
+            # corpus differently on different ranks within one round
+            bounds = self.sharder.acquire_bounds(self.worker_index,
+                                                 int(n_docs))
+        else:
+            bounds = self.partition(int(n_docs))
+        lo, hi = bounds[self.worker_index]
         n_chunks = -(-max(hi - lo, 0) // self.chunk_size)
         scan_ok = (self.score_impl in ("jax", "pallas_fused")
                    and self.heap_impl in ("jax", "pallas") and hi > lo)
@@ -469,6 +481,52 @@ class ShardedSearchDriver:
                       "chunks": n_chunks, "seconds": seconds,
                       "executor": executor, "superchunk_size": s,
                       "dispatch_rounds": dispatches}
+        return heap
+
+    def _reduce(self, heap: FastResultHeapq):
+        """The reduce phase: cross-worker gather/merge + host finalize."""
         if self.n_workers > 1 and self.gather is not None:
             heap = self.gather.merge(heap, self.worker_index)
         return heap.finalize()
+
+    def search(self, q_emb, n_docs, load_chunk: ChunkLoader,
+               topk: int):
+        """Run this worker's encode→score→local-top-k round, then reduce.
+
+        ``n_docs`` may be an int or a sized corpus object (e.g. a lazy
+        ``DatasetView``) — the FairSharder partitions it positionally.
+        Returns the merged ``(scores (Q, k), positions (Q, k))`` —
+        identical on every worker when a gather transport is set.
+        Positions are global corpus offsets; ``-1`` marks empty slots.
+        """
+        return self._reduce(self._score_local(q_emb, n_docs, load_chunk,
+                                              topk))
+
+    def search_async(self, q_emb, n_docs, load_chunk: ChunkLoader,
+                     topk: int) -> Future:
+        """Like :meth:`search`, but the reduce phase (shard gather/merge
+        + host finalize) runs on a driver-owned background thread and the
+        merged ``(scores, positions)`` come back as a Future.
+
+        The scoring phase still runs synchronously on the caller's
+        thread, so by the time this returns the caller may start the
+        *next* round's scoring while this round's merge is in flight —
+        the round-pipelined regime behind ``launch.serve``'s continuous
+        batching and the W=4 scaling-efficiency fix (the per-round
+        O(Q·k·W) merge used to serialize after every round's scoring).
+        Reduces are serialized in submission order on one thread, so
+        results — and the gather transport's rank-order merge — are
+        bitwise identical to the synchronous path.
+        """
+        heap = self._score_local(q_emb, n_docs, load_chunk, topk)
+        if self._reduce_pool is None:
+            self._reduce_pool = ThreadPoolExecutor(
+                max_workers=1, thread_name_prefix="shard-reduce")
+        return self._reduce_pool.submit(self._reduce, heap)
+
+    def close(self) -> None:
+        """Drain and shut down the async-reduce thread (no-op when
+        :meth:`search_async` was never used)."""
+        if self._reduce_pool is not None:
+            self._reduce_pool.shutdown(wait=True)
+            self._reduce_pool = None

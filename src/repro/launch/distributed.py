@@ -26,7 +26,7 @@ from __future__ import annotations
 import threading
 from typing import Callable, Sequence
 
-from repro.core.fair_sharding import FairSharder
+from repro.core.fair_sharding import FairSharder, ShardAborted
 from repro.core.result_heap import FastResultHeapq
 
 
@@ -107,6 +107,9 @@ class SimulatedCluster:
             except BaseException as exc:     # noqa: BLE001 — re-raised below
                 errors[rank] = exc
                 self.gather.abort()
+                # siblings may equally be blocked waiting for this
+                # rank's round report (pipelined acquire_bounds)
+                self.sharder.abort(exc)
 
         threads = [threading.Thread(target=target, args=(rank,),
                                     name=f"sim-worker-{rank}")
@@ -117,7 +120,7 @@ class SimulatedCluster:
             t.join()
         for exc in errors:
             if exc is not None and not isinstance(
-                    exc, threading.BrokenBarrierError):
+                    exc, (threading.BrokenBarrierError, ShardAborted)):
                 raise exc
         for exc in errors:                   # only barrier casualties left
             if exc is not None:
