@@ -79,6 +79,26 @@ def _run_memory(out_json):
     return bench_memory.run(out_json=out_json)
 
 
+def _ivf_metrics(payload):
+    return {
+        # best throughput among sweep points keeping recall@10 >= 0.95
+        "ivf_speedup_at_recall95":
+            payload["headline"]["speedup_at_recall95"],
+        "ivf_recall_quarter_probe":
+            payload["headline"]["recall_quarter_probe"],
+        # structural: full probe must replay the flat ranking exactly,
+        # and the sweep must keep its cluster structure
+        "ivf_full_probe_bitwise":
+            payload["headline"]["ivf_full_probe_bitwise"],
+        "ivf_n_clusters": payload["headline"]["ivf_n_clusters"],
+    }
+
+
+def _run_ivf(out_json):
+    from benchmarks import bench_ivf
+    return bench_ivf.run(out_json=out_json)
+
+
 def _serve_metrics(payload):
     return {
         "serve_qps_speedup_c4": payload["headline"]["qps_speedup_c4"],
@@ -102,13 +122,15 @@ CHECKS = {
     "bench_encode.json": (_run_encode, _encode_metrics),
     "bench_memory.json": (_run_memory, _memory_metrics),
     "bench_serve.json": (_run_serve, _serve_metrics),
+    "bench_ivf.json": (_run_ivf, _ivf_metrics),
 }
 
 # Structural metrics are deterministic functions of the code (dispatch /
 # compile counts, completed-request fractions — not wall times): no
 # noise allowance — any drop is a regression.
 EXACT_METRICS = {"dispatch_reduction", "compile_reduction",
-                 "serve_completed_fraction"}
+                 "serve_completed_fraction", "ivf_full_probe_bitwise",
+                 "ivf_n_clusters"}
 
 
 def main(argv=None) -> int:

@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §7 index):
   encode   legacy per-batch padding vs bucketed pipeline (+ results/*.json)
   serve    sequential per-request loop vs continuous-batching frontend
            QPS/p50/p99 curve over submitter concurrency (+ results/*.json)
+  ivf      flat exhaustive scan vs IVF cluster-pruned search: recall@10
+           vs speedup over the nprobe sweep (+ results/*.json)
 
 ``run.py --check [--tol T]`` re-runs the JSON-emitting benches into a
 scratch dir and compares their key metrics against the committed
@@ -28,8 +30,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (bench_dispatch, bench_encode, bench_kernels,
-                            bench_memory, bench_multinode,
+    from benchmarks import (bench_dispatch, bench_encode, bench_ivf,
+                            bench_kernels, bench_memory, bench_multinode,
                             bench_result_heap, bench_scaling,
                             bench_search_backends, bench_serve,
                             bench_ttfs)
@@ -43,6 +45,7 @@ def main() -> None:
     bench_dispatch.run()
     bench_encode.run()
     bench_serve.run()
+    bench_ivf.run()
 
 
 if __name__ == "__main__":

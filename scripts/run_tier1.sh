@@ -26,6 +26,14 @@ python -m repro.launch.serve --smoke --data-dir "$SERVE_TMP/data" \
   --max-batch 8 --max-wait-ms 2
 rm -rf "$SERVE_TMP"
 
+echo "== ivf smoke (cluster-pruned serving: build/persist index, serve with --nprobe) =="
+IVF_TMP="$(mktemp -d)"
+python -m repro.launch.serve --smoke --data-dir "$IVF_TMP/data" \
+  --index-impl ivf --nclusters 8 --nprobe 2 \
+  --n-requests 4 --batch 3 --concurrency 2 --workers 1 \
+  --max-batch 8 --max-wait-ms 2
+rm -rf "$IVF_TMP"
+
 # Optional perf gate: re-run the JSON-recording benches and compare
 # against the committed results/*.json baselines (relative metrics,
 # tolerance for container noise).  Off by default — timing on shared CI

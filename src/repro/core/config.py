@@ -109,6 +109,21 @@ class EvaluationArguments:
     serve_max_batch: int = 32
     serve_max_wait_ms: float = 2.0
     serve_max_queue: int = 256
+    # Search index backend (repro.index).  "flat" = exhaustive scan over
+    # every corpus row (the recall oracle); "ivf" = cluster-pruned
+    # inverted-file search: a mini-batch k-means coarse quantizer over
+    # ivf_nclusters clusters, and each query batch only scans the union
+    # of its ivf_nprobe nearest clusters.  nprobe == nclusters replays
+    # the flat ranking bitwise (same kernels, permuted scan order).
+    index_impl: str = "flat"             # flat | ivf
+    ivf_nclusters: int = 64
+    ivf_nprobe: int = 8
+    # k-means budget: fixed iteration count + contiguous mini-batch
+    # reads off the cache; deterministic under ivf_seed (every worker
+    # of a multi-node job rebuilds the identical index).
+    ivf_train_steps: int = 40
+    ivf_train_batch: int = 1024
+    ivf_seed: int = 0
 
     def __post_init__(self):
         # Validate at construction (satellite of ISSUE 7): a bad knob
@@ -125,6 +140,10 @@ class EvaluationArguments:
             raise ValueError(
                 f"unknown heap_impl {self.heap_impl!r}; expected one "
                 f"of {list(FastResultHeapq.HEAP_IMPLS)}")
+        if self.index_impl not in ("flat", "ivf"):
+            raise ValueError(
+                f"unknown index_impl {self.index_impl!r}; expected one "
+                f"of ['flat', 'ivf']")
         for name, floor in (("topk", 1), ("encode_batch_size", 1),
                             ("query_batch_size", 1),
                             ("superchunk_size", 0),
@@ -133,7 +152,11 @@ class EvaluationArguments:
                             ("tokenizer_workers", 0),
                             ("encode_pipeline_depth", 0),
                             ("serve_max_batch", 1),
-                            ("serve_max_queue", 1)):
+                            ("serve_max_queue", 1),
+                            ("ivf_nclusters", 1),
+                            ("ivf_nprobe", 1),
+                            ("ivf_train_steps", 1),
+                            ("ivf_train_batch", 1)):
             if getattr(self, name) < floor:
                 raise ValueError(
                     f"{name} must be >= {floor}, got {getattr(self, name)}")

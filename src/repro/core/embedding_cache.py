@@ -150,7 +150,11 @@ class EmbeddingCache:
         sorted_ids, perm, mmap = self._index()
         rows = self._rows_for(stable_id_hash_array(ids), sorted_ids, perm)
         if (rows < 0).any():
-            raise KeyError(f"{(rows < 0).sum()} ids not cached")
+            missing = np.flatnonzero(rows < 0)
+            sample = ", ".join(repr(ids[int(i)]) for i in missing[:5])
+            more = "" if len(missing) <= 5 else ", ..."
+            raise KeyError(
+                f"{len(missing)} ids not cached (e.g. {sample}{more})")
         return np.asarray(mmap[rows])
 
     def get_one(self, raw_id) -> np.ndarray:
@@ -175,9 +179,24 @@ class EmbeddingCache:
         return np.asarray(mmap[lo:hi])
 
     def get_rows(self, rows: np.ndarray) -> np.ndarray:
-        """Fetch explicit row numbers (from a precomputed plan)."""
+        """Fetch explicit row numbers (from a precomputed plan).
+
+        Rows must be in ``[0, n)``: a stale plan carrying ``-1``
+        missing-id sentinels (what :meth:`_rows_for` returns) used to
+        wrap via fancy indexing and silently serve the *last* row's
+        embedding — now it's an ``IndexError``.
+        """
         with self._lock:
-            mmap = self._mmap
+            n, mmap = len(self._ids), self._mmap
+        rows = np.asarray(rows)
+        if len(rows) and (rows.min() < 0 or rows.max() >= n):
+            bad = rows[(rows < 0) | (rows >= n)]
+            raise IndexError(
+                f"{len(bad)} row(s) outside [0, {n}) (e.g. "
+                f"{bad[:5].tolist()}); negative rows usually mean a "
+                f"stale plan with -1 missing-id sentinels")
+        if not len(rows):
+            return np.empty((0, self.dim), self.dtype)
         return np.asarray(mmap[rows])
 
     def row_plan(self, hashes: np.ndarray):

@@ -125,6 +125,77 @@ class PreparedCorpus:
         on the host (-1 marks empty slots)."""
         return np.where(pos >= 0, self.hashes[np.clip(pos, 0, None)], -1)
 
+    def round_for(self, q_emb):
+        """The ``(sized, load_chunk, positions_to_ids)`` triple for one
+        search round against this query batch.
+
+        Flat corpora are query-independent — every round scans the same
+        ``[0, n_docs)`` space — so the prepared members come back as-is.
+        Index-pruned corpora (:class:`IVFPreparedCorpus`) override this
+        to derive a per-batch search space from the query embeddings.
+        """
+        return self.sized, self.load_chunk, self.positions_to_ids
+
+
+class IVFSearchSpace:
+    """The sized object for one IVF round: the concatenation of the
+    selected clusters' permutation slices, positions ``[0, n_selected)``.
+    ``partition_boundaries`` exposes the cluster edges inside that space
+    so the :class:`~repro.core.fair_sharding.FairSharder` snaps shard
+    cuts to whole clusters (each worker then streams a few contiguous
+    permutation slices)."""
+
+    __slots__ = ("n_selected", "partition_boundaries")
+
+    def __init__(self, n_selected: int, partition_boundaries: np.ndarray):
+        self.n_selected = n_selected
+        self.partition_boundaries = partition_boundaries
+
+    def __len__(self) -> int:
+        return self.n_selected
+
+
+class IVFPreparedCorpus(PreparedCorpus):
+    """A corpus prepared behind an :class:`repro.index.ivf.IVFIndex`.
+
+    ``fetch_rows(rows)`` serves arbitrary store rows (cache plan /
+    materialized array); each :meth:`round_for` call selects this query
+    batch's top-``nprobe`` clusters and virtualizes their concatenated
+    permutation slices as the round's search space — the driver and
+    kernels see an ordinary ``[0, n_selected)`` corpus and run
+    completely unchanged.  With ``nprobe == n_clusters`` the space is
+    the whole corpus (cluster-permuted), reproducing the flat ranking.
+    """
+
+    __slots__ = ("index", "fetch_rows", "nprobe")
+
+    def __init__(self, hashes: np.ndarray, n_docs: int, fetch_rows,
+                 index, nprobe: int):
+        super().__init__(hashes, n_docs, load_chunk=None)
+        self.index = index
+        self.fetch_rows = fetch_rows
+        self.nprobe = int(nprobe)
+
+    def round_for(self, q_emb):
+        q = np.asarray(q_emb, np.float32)
+        clusters = self.index.select(q, self.nprobe)
+        sel_rows = self.index.gather_rows(clusters)
+        sized = IVFSearchSpace(len(sel_rows),
+                               self.index.slice_boundaries(clusters))
+        fetch = self.fetch_rows
+
+        def load_chunk(lo: int, hi: int):
+            return fetch(sel_rows[lo:hi])
+
+        def positions_to_ids(pos: np.ndarray) -> np.ndarray:
+            if len(sel_rows) == 0:
+                return np.full(np.shape(pos), -1, np.int64)
+            # sel-space position -> store row -> id hash
+            rows = sel_rows[np.clip(pos, 0, None)]
+            return np.where(pos >= 0, self.hashes[rows], -1)
+
+        return sized, load_chunk, positions_to_ids
+
 
 class RetrievalEvaluator:
     def __init__(self, args: EvaluationArguments, retriever, collator,
@@ -314,6 +385,10 @@ class RetrievalEvaluator:
         all_hashes = np.asarray(corpus_v.id_hashes)
         n_docs = len(corpus_v)
 
+        if self.args.index_impl == "ivf" and n_docs > 0:
+            return self._prepare_ivf(corpus_v, cache,
+                                     device_resident=device_resident)
+
         if device_resident:
             embs = self.encode_corpus(all_hashes, corpus_texts, cache)
             arr = jnp.asarray(embs, jnp.float32) if on_device \
@@ -358,6 +433,90 @@ class RetrievalEvaluator:
         return PreparedCorpus(all_hashes, n_docs, load_chunk,
                               sized=corpus_v)
 
+    def _prepare_ivf(self, corpus_v: DatasetView,
+                     cache: EmbeddingCache | None, *,
+                     device_resident: bool = False) -> "IVFPreparedCorpus":
+        """Prepare a corpus behind a cluster-pruned IVF index.
+
+        The coarse quantizer trains off contiguous ``get_range`` streams
+        of a corpus-ordered row store — the cache's mmap plan when it
+        covers the corpus (no full-corpus materialization), else the
+        embeddings encoded here (warming ``cache`` when given).  A
+        cache-backed index persists torn-write-safe under
+        ``{cache.path}/ivf_k{K}`` keyed by a digest of the corpus hashes
+        and build knobs, so repeated serve startups reload instead of
+        retraining; any mismatch (corpus changed, knobs changed, torn
+        save) silently rebuilds.
+        """
+        import hashlib
+        import os
+
+        a = self.args
+        on_device = a.score_impl != "numpy"
+        all_hashes = np.asarray(corpus_v.id_hashes)
+        n_docs = len(corpus_v)
+        k = int(min(a.ivf_nclusters, n_docs))
+
+        plan = (cache.row_plan(all_hashes)
+                if cache is not None and len(cache)
+                and a.use_cached_embeddings and not device_resident
+                else None)
+        if plan is not None:
+            kind, rows_map = plan
+            dim = cache.dim
+            if kind == "range":
+                def get_range(lo, hi):
+                    return cache.get_range(lo, hi).astype(np.float32)
+
+                def fetch_rows(rows):
+                    return cache.get_rows(rows).astype(np.float32)
+            else:
+                def get_range(lo, hi):
+                    return cache.get_rows(rows_map[lo:hi]).astype(
+                        np.float32)
+
+                def fetch_rows(rows):
+                    return cache.get_rows(rows_map[rows]).astype(
+                        np.float32)
+        else:
+            # encode now (warming the cache when given) and keep the
+            # embeddings as the row store; device-resident for the
+            # device backends so chunk loads are zero-copy slices
+            embs = np.asarray(
+                self.encode_corpus(all_hashes, corpus_v.texts(), cache),
+                np.float32)
+            dim = embs.shape[1]
+
+            def get_range(lo, hi):
+                return embs[lo:hi]
+
+            arr = (jnp.asarray(embs) if device_resident and on_device
+                   else embs)
+
+            def fetch_rows(rows):
+                return arr[rows]
+
+        digest = (hashlib.sha1(all_hashes.tobytes()).hexdigest()[:16]
+                  + f"-s{a.ivf_seed}-t{a.ivf_train_steps}"
+                  + f"-b{a.ivf_train_batch}")
+        index_dir = (os.path.join(cache.path, f"ivf_k{k}")
+                     if cache is not None else None)
+        index = None
+        if index_dir is not None:
+            from repro.index import IVFIndex
+            index = IVFIndex.load(index_dir, expect_n=n_docs,
+                                  expect_dim=dim, expect_clusters=k,
+                                  expect_digest=digest)
+        if index is None:
+            from repro.index import IVFIndex
+            index = IVFIndex.build(get_range, n_docs, k, seed=a.ivf_seed,
+                                   train_steps=a.ivf_train_steps,
+                                   train_batch=a.ivf_train_batch)
+            if index_dir is not None:
+                index.save(index_dir, digest=digest)
+        return IVFPreparedCorpus(all_hashes, n_docs, fetch_rows, index,
+                                 a.ivf_nprobe)
+
     def search_prepared(self, queries, prepared: "PreparedCorpus",
                         topk: int | None = None):
         """:meth:`search` against an already-prepared corpus."""
@@ -366,10 +525,9 @@ class RetrievalEvaluator:
         q_view = self._corpus_view(queries)
         q_emb = self._encode_texts(q_view.texts(), True, device=on_device)
         driver = self.make_driver()
-        vals, pos = driver.search(q_emb, prepared.sized, prepared.load_chunk,
-                                  topk)
-        return (np.asarray(q_view.id_hashes),
-                prepared.positions_to_ids(pos), vals)
+        sized, load_chunk, to_ids = prepared.round_for(q_emb)
+        vals, pos = driver.search(q_emb, sized, load_chunk, topk)
+        return np.asarray(q_view.id_hashes), to_ids(pos), vals
 
     def search_texts(self, texts: Sequence[str],
                      prepared: "PreparedCorpus", topk: int | None = None,
@@ -382,9 +540,9 @@ class RetrievalEvaluator:
         q_emb = self._encode_texts(list(texts), True, device=on_device,
                                    min_batch_dim=min_batch_dim)
         driver = self.make_driver()
-        vals, pos = driver.search(q_emb, prepared.sized, prepared.load_chunk,
-                                  topk)
-        return prepared.positions_to_ids(pos), vals
+        sized, load_chunk, to_ids = prepared.round_for(q_emb)
+        vals, pos = driver.search(q_emb, sized, load_chunk, topk)
+        return to_ids(pos), vals
 
     def search(self, queries, corpus, topk: int | None = None,
                cache: EmbeddingCache | None = None):

@@ -85,14 +85,40 @@ class FairSharder:
             sizes[order[i % self.n]] += 1
         return sizes.tolist()
 
-    def bounds(self, total_items: int) -> list[tuple[int, int]]:
+    def bounds(self, total_items: int,
+               boundaries=None) -> list[tuple[int, int]]:
+        """Contiguous ``[lo, hi)`` per worker covering ``total_items``.
+
+        ``boundaries`` (optional, sorted, starting at 0 and ending at
+        ``total_items``) restricts where cuts may land: each
+        proportional cut point snaps to the nearest allowed boundary.
+        The IVF search space passes its cluster edges here so every
+        worker's shard is a run of *whole* clusters — shards stay
+        contiguous permutation slices instead of slivers of every
+        cluster.  Snapped cuts are forced monotone, so shards still
+        partition ``[0, total_items)`` exactly (a slow worker may end
+        up with an empty shard when its share is smaller than the
+        cluster granularity).
+        """
         sizes = self.shares(total_items)
         ends = np.cumsum(sizes)
-        starts = ends - sizes
+        if boundaries is not None and total_items > 0:
+            bnd = np.asarray(boundaries, np.int64)
+            # snap each interior cut to the nearest cluster edge;
+            # maximum.accumulate keeps the cut sequence monotone
+            idx = np.searchsorted(bnd, ends[:-1])
+            idx = np.clip(idx, 1, len(bnd) - 1)
+            below = bnd[idx - 1]
+            above = bnd[idx]
+            snapped = np.where(ends[:-1] - below <= above - ends[:-1],
+                               below, above)
+            snapped = np.maximum.accumulate(snapped)
+            ends = np.concatenate([snapped, ends[-1:]])
+        starts = np.concatenate([[0], ends[:-1]])
         return list(zip(starts.tolist(), ends.tolist()))
 
-    def acquire_bounds(self, worker: int,
-                       total_items: int) -> list[tuple[int, int]]:
+    def acquire_bounds(self, worker: int, total_items: int,
+                       boundaries=None) -> list[tuple[int, int]]:
         """Round-versioned :meth:`bounds` for pipelined multi-round use.
 
         A worker's r-th call blocks until rounds ``0..r-1`` have all
@@ -126,7 +152,7 @@ class FairSharder:
         # safe outside the lock: round r cannot commit (and move the
         # EMA) until THIS worker reports it, which happens only after
         # the caller scores the slice these bounds describe
-        return self.bounds(total_items)
+        return self.bounds(total_items, boundaries)
 
     def abort(self, exc: BaseException | None = None) -> None:
         """Release workers blocked in :meth:`acquire_bounds` when a

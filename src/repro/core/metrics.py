@@ -50,6 +50,8 @@ def compute_metrics(metric_names, run_ids, qid_hashes, qrels) -> dict:
             any_hit = hit.any(axis=1)
             val = np.where(any_hit, 1.0 / (first + 1.0), 0.0)
         elif base == "recall":
+            # a query with zero relevant qrels (possible after suite
+            # filtering) contributes recall 0, never a 0/0 division
             val = np.where(n_rel > 0, (rk > 0).sum(1) / np.maximum(n_rel, 1),
                            0.0)
         elif base == "map":

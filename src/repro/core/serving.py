@@ -109,15 +109,17 @@ class EvaluatorServeBackend:
         q_emb = self.ev._encode_texts(list(texts), True,
                                       device=self.on_device,
                                       min_batch_dim=self.min_batch_dim)
-        inner = self.driver.search_async(q_emb, self.prepared.sized,
-                                         self.prepared.load_chunk, topk)
+        # per-round triple: flat corpora hand back their static members;
+        # an IVF-prepared corpus derives this micro-batch's pruned
+        # search space (top-nprobe clusters) from the query embeddings
+        sized, load_chunk, to_ids = self.prepared.round_for(q_emb)
+        inner = self.driver.search_async(q_emb, sized, load_chunk, topk)
         outer: Future = Future()
 
         def _done(f: Future) -> None:
             try:
                 vals, pos = f.result()
-                outer.set_result(
-                    (self.prepared.positions_to_ids(pos), vals))
+                outer.set_result((to_ids(pos), vals))
             except BaseException as exc:   # noqa: BLE001 — routed to caller
                 outer.set_exception(exc)
 

@@ -300,10 +300,15 @@ class ShardedSearchDriver:
         ``n_docs`` is a document count or any sized corpus object — in
         particular a lazy ``repro.data.views.DatasetView`` composition,
         which is partitioned positionally without ever materializing it.
+        A sized object may expose ``partition_boundaries`` (sorted cut
+        points covering ``[0, len)``, e.g. the IVF search space's
+        cluster edges); shard cuts then snap to those boundaries so
+        every worker's slice stays a run of whole clusters.
         """
+        boundaries = getattr(n_docs, "partition_boundaries", None)
         if not isinstance(n_docs, (int, np.integer)):
             n_docs = len(n_docs)
-        return self.sharder.bounds(int(n_docs))
+        return self.sharder.bounds(int(n_docs), boundaries)
 
     # -- worker ---------------------------------------------------------------
     def _pipelined_chunks(self, lo: int, hi: int, load_chunk: ChunkLoader):
@@ -437,6 +442,7 @@ class ShardedSearchDriver:
         (``search_async``) while this round scores."""
         n_queries = q_emb.shape[0]
         heap = FastResultHeapq(n_queries, topk, impl=self.heap_impl)
+        boundaries = getattr(n_docs, "partition_boundaries", None)
         if not isinstance(n_docs, (int, np.integer)):
             n_docs = len(n_docs)
         if self.n_workers > 1:
@@ -445,9 +451,9 @@ class ShardedSearchDriver:
             # bounds() read could straddle an EMA commit and split the
             # corpus differently on different ranks within one round
             bounds = self.sharder.acquire_bounds(self.worker_index,
-                                                 int(n_docs))
+                                                 int(n_docs), boundaries)
         else:
-            bounds = self.partition(int(n_docs))
+            bounds = self.sharder.bounds(int(n_docs), boundaries)
         lo, hi = bounds[self.worker_index]
         n_chunks = -(-max(hi - lo, 0) // self.chunk_size)
         scan_ok = (self.score_impl in ("jax", "pallas_fused")

@@ -1,0 +1,22 @@
+"""Index subsystem: sublinear search backends (ROADMAP item 2).
+
+Everything outside this package scans the whole corpus per query; the
+classes here trade a bounded amount of recall for sublinear work:
+
+  * :mod:`repro.index.kmeans` — jit-compiled mini-batch k-means coarse
+    quantizer, trained off contiguous ``EmbeddingCache.get_range``
+    streams (no full-corpus materialization).
+  * :mod:`repro.index.ivf` — :class:`IVFIndex`, a cluster-pruned
+    (inverted-file) layout over any row-addressable embedding store:
+    rows sorted by cluster, per-cluster ``[lo, hi)`` offsets + a row
+    permutation persisted torn-write-safe like the embedding cache.
+
+The flat exhaustive scan stays available as the recall oracle
+(``EvaluationArguments.index_impl='flat'``); ``benchmarks/bench_ivf.py``
+records the recall@k-vs-speedup trade-off.
+"""
+
+from repro.index.ivf import IVFIndex
+from repro.index.kmeans import assign_rows, train_kmeans
+
+__all__ = ["IVFIndex", "assign_rows", "train_kmeans"]

@@ -1,0 +1,103 @@
+"""Jit-compiled mini-batch k-means coarse quantizer (index subsystem).
+
+The quantizer behind :class:`repro.index.ivf.IVFIndex`: centroids are
+trained with streaming mini-batch k-means (Sculley 2010's per-center
+count-weighted update, batched) where every batch is one contiguous
+``get_range(lo, hi)`` read — the ``EmbeddingCache`` mmap fast path — so
+training never materializes the corpus.  Assignment uses squared L2
+(``argmin ||x - c||² = argmin ||c||² - 2 x·c``), computed as one matmul
+per batch inside a single jitted step.
+
+Determinism: all randomness (centroid seeding, batch window starts)
+comes from one ``np.random.default_rng(seed)``, the iteration budget is
+fixed, and the jitted update is pure — same seed + same rows = same
+centroids, on every worker of a cluster (the multi-node path relies on
+every rank building the identical index).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def _assign_step(centroids, batch):
+    """Nearest-centroid ids for one batch: argmin_c ||x - c||²."""
+    c2 = (centroids * centroids).sum(axis=1)
+    sims = batch @ centroids.T
+    return jnp.argmin(c2[None, :] - 2.0 * sims, axis=1)
+
+
+@jax.jit
+def _train_step(centroids, counts, batch):
+    """One mini-batch update: assign, then move each hit centroid to the
+    count-weighted running mean of everything ever assigned to it (the
+    batched form of the per-sample ``c += (x - c) / count`` rule)."""
+    k = centroids.shape[0]
+    assign = _assign_step(centroids, batch)
+    sums = jax.ops.segment_sum(batch, assign, num_segments=k)
+    hits = jax.ops.segment_sum(jnp.ones(batch.shape[0], jnp.float32),
+                               assign, num_segments=k)
+    new_counts = counts + hits
+    moved = ((centroids * counts[:, None] + sums)
+             / jnp.maximum(new_counts, 1.0)[:, None])
+    # a centroid no batch row hit must stay put, not decay toward zero
+    centroids = jnp.where((hits > 0)[:, None], moved, centroids)
+    return centroids, new_counts
+
+
+def train_kmeans(get_range, n_rows: int, n_clusters: int, *,
+                 train_steps: int = 40, batch_size: int = 1024,
+                 seed: int = 0) -> np.ndarray:
+    """Train ``min(n_clusters, n_rows)`` centroids off a row stream.
+
+    ``get_range(lo, hi)`` returns rows ``[lo, hi)`` as an (hi-lo, d)
+    array — ``EmbeddingCache.get_range`` or any array slice.  Each of
+    the ``train_steps`` mini-batches is one contiguous window at a
+    seeded-random start (cache rows arrive in corpus order, which is
+    already topic-arbitrary, so contiguous windows behave like uniform
+    samples while staying single-mmap-read cheap).  Returns centroids
+    as a float32 (k, d) array.
+    """
+    if n_rows <= 0:
+        raise ValueError(f"n_rows must be >= 1, got {n_rows}")
+    if train_steps < 1:
+        raise ValueError(f"train_steps must be >= 1, got {train_steps}")
+    k = int(min(n_clusters, n_rows))
+    rng = np.random.default_rng(seed)
+    init_rows = np.sort(rng.choice(n_rows, size=k, replace=False))
+    cents = np.concatenate(
+        [np.asarray(get_range(int(r), int(r) + 1), np.float32)
+         for r in init_rows])
+    centroids = jnp.asarray(cents, jnp.float32)
+    # each centroid starts owning its seed row, so the first batches
+    # can't yank a centroid across the space on a single stray sample
+    counts = jnp.ones(k, jnp.float32)
+    b = int(min(batch_size, n_rows))
+    for _ in range(train_steps):
+        lo = int(rng.integers(0, n_rows - b + 1))
+        batch = jnp.asarray(np.asarray(get_range(lo, lo + b), np.float32))
+        centroids, counts = _train_step(centroids, counts, batch)
+    return np.asarray(centroids)
+
+
+def assign_rows(centroids: np.ndarray, get_range, n_rows: int, *,
+                batch_size: int = 4096) -> np.ndarray:
+    """Stream every row through nearest-centroid assignment.
+
+    Returns an (n_rows,) int32 cluster id per row.  The ragged tail
+    batch pads up to ``batch_size`` so the jitted assign compiles once.
+    """
+    out = np.empty(n_rows, np.int32)
+    cj = jnp.asarray(centroids, jnp.float32)
+    b = int(min(batch_size, max(n_rows, 1)))
+    for lo in range(0, n_rows, b):
+        hi = min(lo + b, n_rows)
+        batch = np.asarray(get_range(lo, hi), np.float32)
+        if hi - lo < b:
+            batch = np.pad(batch, ((0, b - (hi - lo)), (0, 0)))
+        out[lo:hi] = np.asarray(_assign_step(cj, jnp.asarray(batch)))[
+            : hi - lo]
+    return out

@@ -67,6 +67,15 @@ def main(argv=None):
                          "ShardedSearchDriver")
     ap.add_argument("--score-impl", default="jax",
                     choices=("numpy", "jax", "pallas_fused"))
+    ap.add_argument("--index-impl", default="flat",
+                    choices=("flat", "ivf"),
+                    help="flat = exhaustive scan (recall oracle); ivf = "
+                         "cluster-pruned sublinear search (repro.index)")
+    ap.add_argument("--nclusters", type=int, default=64,
+                    help="IVF coarse-quantizer cluster count")
+    ap.add_argument("--nprobe", type=int, default=8,
+                    help="clusters scanned per query batch (nprobe == "
+                         "nclusters replays the flat ranking)")
     ap.add_argument("--max-batch", type=int, default=32,
                     help="micro-batch flush size (coalesced queries)")
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
@@ -106,6 +115,9 @@ def main(argv=None):
 
     eval_args = EvaluationArguments(topk=args.topk,
                                     score_impl=args.score_impl,
+                                    index_impl=args.index_impl,
+                                    ivf_nclusters=args.nclusters,
+                                    ivf_nprobe=args.nprobe,
                                     serve_max_batch=args.max_batch,
                                     serve_max_wait_ms=args.max_wait_ms,
                                     serve_max_queue=args.max_queue)

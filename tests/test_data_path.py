@@ -132,6 +132,40 @@ def test_cache_missing_raises(tmp_path):
         c.get(["missing"])
 
 
+def test_cache_missing_keyerror_names_ids(tmp_path, rng):
+    """The KeyError must be actionable: it names a sample of the missing
+    raw ids, not just a count."""
+    c = EmbeddingCache(str(tmp_path / "c"), dim=4)
+    c.cache_records(["a", "b"], rng.normal(size=(2, 4)).astype(np.float16))
+    with pytest.raises(KeyError) as ei:
+        c.get(["a", "ghost-1", "b", "ghost-2"])
+    msg = str(ei.value)
+    assert "2 ids not cached" in msg
+    assert "ghost-1" in msg and "ghost-2" in msg
+    assert "a" not in msg.split("(e.g.")[1].split(")")[0].split(", ")
+    # more than 5 missing: sampled, with an ellipsis marker
+    with pytest.raises(KeyError) as ei:
+        c.get([f"ghost-{i}" for i in range(9)])
+    assert "..." in str(ei.value)
+
+
+def test_cache_get_rows_rejects_out_of_range(tmp_path, rng):
+    """get_rows must refuse rows outside [0, n): a stale plan carrying
+    -1 missing-id sentinels used to wrap via fancy indexing and silently
+    serve the LAST row's embedding (regression)."""
+    c = EmbeddingCache(str(tmp_path / "c"), dim=4)
+    v = rng.normal(size=(3, 4)).astype(np.float16)
+    c.cache_records(["a", "b", "c"], v)
+    with pytest.raises(IndexError, match="stale plan"):
+        c.get_rows(np.array([0, -1, 2]))
+    with pytest.raises(IndexError):
+        c.get_rows(np.array([3]))
+    # in-range rows (and the empty request) still serve
+    np.testing.assert_allclose(c.get_rows(np.array([2, 0])),
+                               v[[2, 0]], rtol=1e-3)
+    assert c.get_rows(np.array([], np.int64)).shape == (0, 4)
+
+
 def test_cache_append_is_append_only(tmp_path, rng):
     """cache_records must write O(delta) — the ids index file grows in
     place (same inode, +8 bytes/row) instead of being re-saved in full

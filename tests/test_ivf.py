@@ -1,0 +1,524 @@
+"""IVF cluster-pruned index: quantizer, layout, persistence, and the
+flat-equivalence story.
+
+The contract under test (ISSUE 8): ``nprobe == n_clusters`` reproduces
+the flat exhaustive ranking through the same kernels across the whole
+``score_impl × heap_impl × W`` matrix; pruned probes trade bounded
+recall for sublinear work; the persisted cluster layout survives torn
+writes exactly like the embedding cache.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.collator import RetrievalCollator
+from repro.core.config import DataArguments, EvaluationArguments
+from repro.core.embedding_cache import EmbeddingCache
+from repro.core.evaluator import (IVFPreparedCorpus, IVFSearchSpace,
+                                  RetrievalEvaluator)
+from repro.core.fair_sharding import FairSharder
+from repro.core.sharded_search import ShardedSearchDriver
+from repro.data.tokenizer import HashTokenizer
+from repro.index import IVFIndex, assign_rows, train_kmeans
+from repro.launch.distributed import SimulatedCluster
+
+SCORE_IMPLS = ("numpy", "jax", "pallas_fused")
+HEAP_IMPLS = ("python", "jax", "pallas")
+WORLD_SIZES = (1, 2)
+
+
+def _clustered(n_docs, dim, n_topics, n_queries, seed=0, noise=0.12):
+    """Unit-norm docs around unit-norm topic centers + nearby queries."""
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_topics, dim)).astype(np.float32)
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    topic = rng.integers(0, n_topics, size=n_docs)
+    docs = centers[topic] + noise * rng.normal(
+        size=(n_docs, dim)).astype(np.float32)
+    docs /= np.linalg.norm(docs, axis=1, keepdims=True)
+    q = docs[rng.choice(n_docs, n_queries, replace=False)] + \
+        0.04 * rng.normal(size=(n_queries, dim)).astype(np.float32)
+    return docs, (q / np.linalg.norm(q, axis=1, keepdims=True)
+                  ).astype(np.float32)
+
+
+# -- kmeans -------------------------------------------------------------------
+
+
+def test_kmeans_deterministic():
+    docs, _ = _clustered(300, 16, 5, 1)
+    get = lambda lo, hi: docs[lo:hi]                      # noqa: E731
+    c1 = train_kmeans(get, 300, 5, train_steps=10, batch_size=64, seed=3)
+    c2 = train_kmeans(get, 300, 5, train_steps=10, batch_size=64, seed=3)
+    np.testing.assert_array_equal(c1, c2)
+    c3 = train_kmeans(get, 300, 5, train_steps=10, batch_size=64, seed=4)
+    assert not np.array_equal(c1, c3)
+
+
+def test_kmeans_recovers_separated_clusters():
+    """On well-separated topics, nearly every doc should share its
+    cluster with the other docs of its topic (assignment purity)."""
+    docs, _ = _clustered(600, 24, 4, 1, noise=0.08)
+    get = lambda lo, hi: docs[lo:hi]                      # noqa: E731
+    cents = train_kmeans(get, 600, 4, train_steps=30, batch_size=128)
+    assign = assign_rows(cents, get, 600)
+    assert assign.shape == (600,)
+    # every cluster is populated and every row sits in its own nearest
+    # cluster (assignment consistent with the trained centroids)
+    sizes = np.bincount(assign, minlength=4)
+    assert (sizes > 0).all()
+    d2 = ((docs[:, None] - cents[None]) ** 2).sum(-1)
+    np.testing.assert_array_equal(assign, np.argmin(d2, axis=1))
+
+
+def test_kmeans_edge_cases():
+    docs = np.eye(3, 8, dtype=np.float32)
+    get = lambda lo, hi: docs[lo:hi]                      # noqa: E731
+    # more clusters than rows: capped at n_rows
+    cents = train_kmeans(get, 3, 10, train_steps=2, batch_size=2)
+    assert cents.shape == (3, 8)
+    with pytest.raises(ValueError, match="n_rows"):
+        train_kmeans(get, 0, 2)
+    with pytest.raises(ValueError, match="train_steps"):
+        train_kmeans(get, 3, 2, train_steps=0)
+
+
+# -- layout invariants --------------------------------------------------------
+
+
+def test_build_layout_invariants():
+    docs, _ = _clustered(500, 16, 6, 1)
+    get = lambda lo, hi: docs[lo:hi]                      # noqa: E731
+    idx = IVFIndex.build(get, 500, 6, train_steps=10)
+    # perm is a permutation of [0, n)
+    assert np.array_equal(np.sort(idx.perm), np.arange(500))
+    # offsets partition [0, n) and match the assignment counts
+    assign = assign_rows(idx.centroids, get, 500)
+    np.testing.assert_array_equal(
+        idx.cluster_sizes(), np.bincount(assign, minlength=6))
+    # every cluster slice holds exactly that cluster's rows, in their
+    # original (stable) relative order
+    for c in range(idx.n_clusters):
+        rows = idx.perm[idx.offsets[c]:idx.offsets[c + 1]]
+        assert (assign[rows] == c).all()
+        assert (np.diff(rows) > 0).all()
+
+
+def test_select_and_gather_edges():
+    docs, q = _clustered(400, 16, 8, 3)
+    idx = IVFIndex.build(lambda lo, hi: docs[lo:hi], 400, 8,
+                         train_steps=10)
+    full = idx.select(q, idx.n_clusters)
+    assert np.array_equal(np.sort(full), full)            # ascending
+    assert len(idx.gather_rows(full)) == 400
+    few = idx.select(q, 2)
+    assert 1 <= len(few) <= min(2 * len(q), idx.n_clusters)
+    # nprobe beyond n_clusters clamps; 1D query promotes to a batch
+    assert np.array_equal(idx.select(q[0], 999), full)
+    assert len(idx.gather_rows(np.empty(0, np.int64))) == 0
+    b = idx.slice_boundaries(few)
+    assert b[0] == 0 and b[-1] == len(idx.gather_rows(few))
+    assert (np.diff(b) > 0).all()
+
+
+# -- persistence --------------------------------------------------------------
+
+
+def test_persist_roundtrip_and_staleness(tmp_path):
+    docs, _ = _clustered(200, 8, 4, 1)
+    idx = IVFIndex.build(lambda lo, hi: docs[lo:hi], 200, 4,
+                         train_steps=5)
+    d = str(tmp_path / "ivf")
+    idx.save(d, digest="dig-1")
+    back = IVFIndex.load(d, expect_n=200, expect_dim=8,
+                         expect_clusters=4, expect_digest="dig-1")
+    assert back is not None
+    np.testing.assert_array_equal(back.perm, idx.perm)
+    np.testing.assert_array_equal(back.offsets, idx.offsets)
+    np.testing.assert_array_equal(back.centroids, idx.centroids)
+    # any expectation mismatch means "rebuild", not "serve stale"
+    assert IVFIndex.load(d, expect_digest="dig-2") is None
+    assert IVFIndex.load(d, expect_n=201) is None
+    assert IVFIndex.load(d, expect_dim=16) is None
+    assert IVFIndex.load(d, expect_clusters=8) is None
+    assert IVFIndex.load(str(tmp_path / "nowhere")) is None
+
+
+def test_persist_torn_write_reopen(tmp_path):
+    """Torn payload files (crash mid-save) must read as 'rebuild' —
+    never as a wrong permutation (the cache's crash-safety contract)."""
+    docs, _ = _clustered(150, 8, 3, 1)
+    idx = IVFIndex.build(lambda lo, hi: docs[lo:hi], 150, 3,
+                         train_steps=5)
+    d = str(tmp_path / "ivf")
+
+    def fresh():
+        idx.save(d, digest="x")
+
+    # short perm.bin
+    fresh()
+    with open(os.path.join(d, "perm.bin"), "r+b") as f:
+        f.truncate(8 * 149)
+    assert IVFIndex.load(d, expect_digest="x") is None
+    # short offsets.bin
+    fresh()
+    with open(os.path.join(d, "offsets.bin"), "r+b") as f:
+        f.truncate(8)
+    assert IVFIndex.load(d, expect_digest="x") is None
+    # short centroids.bin
+    fresh()
+    with open(os.path.join(d, "centroids.bin"), "r+b") as f:
+        f.truncate(4)
+    assert IVFIndex.load(d, expect_digest="x") is None
+    # right length but not a permutation (e.g. recycled garbage bytes)
+    fresh()
+    perm = np.zeros(150, np.int64)
+    with open(os.path.join(d, "perm.bin"), "wb") as f:
+        f.write(perm.tobytes())
+    assert IVFIndex.load(d, expect_digest="x") is None
+    # torn meta.json
+    fresh()
+    with open(os.path.join(d, "meta.json"), "w") as f:
+        f.write('{"n": 150, "dim"')
+    assert IVFIndex.load(d) is None
+    # trailing garbage past the committed sizes is ignored (cache rule)
+    fresh()
+    for fname in ("perm.bin", "offsets.bin", "centroids.bin"):
+        with open(os.path.join(d, fname), "ab") as f:
+            f.write(b"\x07" * 13)
+    back = IVFIndex.load(d, expect_digest="x")
+    assert back is not None
+    np.testing.assert_array_equal(back.perm, idx.perm)
+
+
+# -- driver-level equivalence and pruning -------------------------------------
+
+
+def _flat_search(q, docs, topk, **kw):
+    driver = ShardedSearchDriver(chunk_size=64, **kw)
+    vals, pos = driver.search(q, len(docs), lambda lo, hi: docs[lo:hi],
+                              topk)
+    return vals, pos
+
+
+def _ivf_search(q, docs, index, nprobe, topk, world=1, **kw):
+    hashes = np.arange(len(docs), dtype=np.int64)
+    prepared = IVFPreparedCorpus(hashes, len(docs),
+                                 lambda rows: docs[rows], index, nprobe)
+    sized, load_chunk, to_ids = prepared.round_for(q)
+    if world == 1:
+        driver = ShardedSearchDriver(chunk_size=64, **kw)
+        vals, pos = driver.search(q, sized, load_chunk, topk)
+        return [(to_ids(pos), vals)]
+    cluster = SimulatedCluster(world)
+    drivers = [ShardedSearchDriver(
+        n_workers=world, worker_index=r, sharder=cluster.sharder,
+        gather=cluster.gather, chunk_size=64, **kw)
+        for r in range(world)]
+    outs = cluster.run(
+        lambda rank: drivers[rank].search(q, sized, load_chunk, topk))
+    return [(to_ids(pos), vals) for vals, pos in outs]
+
+
+@pytest.fixture(scope="module")
+def ivf_synth():
+    docs, q = _clustered(800, 16, 10, 12)
+    index = IVFIndex.build(lambda lo, hi: docs[lo:hi], len(docs), 10,
+                           train_steps=20)
+    flat_vals, flat_pos = _flat_search(q, docs, 10, score_impl="numpy")
+    flat_ids = np.where(flat_pos >= 0, flat_pos.astype(np.int64), -1)
+    return {"docs": docs, "q": q, "index": index,
+            "flat_ids": flat_ids, "flat_vals": flat_vals}
+
+
+@pytest.mark.parametrize("world", WORLD_SIZES)
+@pytest.mark.parametrize("heap_impl", HEAP_IMPLS)
+@pytest.mark.parametrize("score_impl", SCORE_IMPLS)
+def test_full_probe_matrix_matches_flat(ivf_synth, score_impl, heap_impl,
+                                        world):
+    """nprobe == n_clusters through every score/heap backend and world
+    size reproduces the flat exhaustive ranking: bitwise ids, allclose
+    scores, on every rank."""
+    outs = _ivf_search(ivf_synth["q"], ivf_synth["docs"],
+                       ivf_synth["index"], ivf_synth["index"].n_clusters,
+                       10, world=world, score_impl=score_impl,
+                       heap_impl=heap_impl)
+    for ids, vals in outs:
+        np.testing.assert_array_equal(ids, ivf_synth["flat_ids"])
+        np.testing.assert_allclose(vals, ivf_synth["flat_vals"],
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_pruned_recall_floor(ivf_synth):
+    """nprobe = n_clusters // 4 on a clustered corpus keeps
+    recall@10 >= 0.9 against the flat oracle (queries probed in small
+    batches — the serving regime pruning is for)."""
+    docs, q, index = (ivf_synth["docs"], ivf_synth["q"],
+                      ivf_synth["index"])
+    nprobe = max(index.n_clusters // 4, 1)
+    recalls = []
+    for lo in range(0, len(q), 3):
+        qb = q[lo: lo + 3]
+        (ids, _), = _ivf_search(qb, docs, index, nprobe, 10,
+                                score_impl="numpy")
+        flat = ivf_synth["flat_ids"][lo: lo + 3]
+        recalls += [len(set(f[f >= 0].tolist()) & set(r[r >= 0].tolist()))
+                    / 10 for f, r in zip(flat, ids)]
+    assert np.mean(recalls) >= 0.9, np.mean(recalls)
+
+
+def test_pruned_scans_fewer_rows(ivf_synth):
+    index, q = ivf_synth["index"], ivf_synth["q"]
+    prepared = IVFPreparedCorpus(
+        np.arange(len(ivf_synth["docs"]), dtype=np.int64),
+        len(ivf_synth["docs"]), lambda rows: ivf_synth["docs"][rows],
+        index, 1)
+    sized, _, _ = prepared.round_for(q[:2])
+    assert 0 < len(sized) < len(ivf_synth["docs"])
+    assert isinstance(sized, IVFSearchSpace)
+    assert sized.partition_boundaries[-1] == len(sized)
+
+
+def test_topk_exceeds_selected_cluster_rows(ivf_synth):
+    """k larger than the probed clusters' total rows: the tail is empty
+    (-1), never recycled garbage — and larger than any single cluster
+    is business as usual."""
+    docs, q, index = (ivf_synth["docs"], ivf_synth["q"][:1],
+                      ivf_synth["index"])
+    sized, _, _ = IVFPreparedCorpus(
+        np.arange(len(docs), dtype=np.int64), len(docs),
+        lambda rows: docs[rows], index, 1).round_for(q)
+    n_sel = len(sized)
+    big_k = n_sel + 7
+    (ids, vals), = _ivf_search(q, docs, index, 1, big_k,
+                               score_impl="numpy")
+    assert (ids[0, :n_sel] >= 0).all()
+    assert (ids[0, n_sel:] == -1).all()
+    assert (vals[0, n_sel:] == -np.inf).all()
+
+
+def test_empty_selection_returns_empty():
+    """A query whose probed clusters are all empty gets an all-empty
+    result, not an exception (manually constructed degenerate layout —
+    select() drops empty clusters, leaving nothing)."""
+    rng = np.random.default_rng(0)
+    docs = rng.normal(size=(20, 8)).astype(np.float32)
+    # two centroids, every row in cluster 1; a query near centroid 0
+    centroids = np.stack([np.full(8, 10.0, np.float32),
+                          docs.mean(0)])
+    index = IVFIndex(centroids, np.arange(20, dtype=np.int64),
+                     np.array([0, 0, 20], np.int64))
+    q = np.full((1, 8), 10.0, np.float32)
+    assert len(index.select(q, 1)) == 0
+    prepared = IVFPreparedCorpus(np.arange(20, dtype=np.int64), 20,
+                                 lambda rows: docs[rows], index, 1)
+    sized, load_chunk, to_ids = prepared.round_for(q)
+    assert len(sized) == 0
+    driver = ShardedSearchDriver(score_impl="numpy", chunk_size=8)
+    vals, pos = driver.search(q, sized, load_chunk, 5)
+    assert (to_ids(pos) == -1).all()
+
+
+# -- fair sharding over cluster boundaries ------------------------------------
+
+
+def test_sharder_snaps_to_boundaries():
+    s = FairSharder(3)
+    boundaries = np.array([0, 10, 35, 60, 80, 100], np.int64)
+    bounds = s.bounds(100, boundaries)
+    # exact partition of [0, 100) ...
+    assert bounds[0][0] == 0 and bounds[-1][1] == 100
+    for (a, b), (c, d) in zip(bounds, bounds[1:]):
+        assert b == c
+    # ... with every interior cut on a cluster edge
+    for _, hi in bounds[:-1]:
+        assert hi in boundaries.tolist()
+    # plain bounds (no boundaries) unchanged
+    plain = s.bounds(100)
+    assert plain[0][0] == 0 and plain[-1][1] == 100
+
+
+def test_sharder_boundaries_with_coarse_clusters():
+    """Cluster granularity coarser than a worker's share: empty shards
+    are legal, coverage stays exact."""
+    s = FairSharder(4)
+    boundaries = np.array([0, 90, 100], np.int64)
+    bounds = s.bounds(100, boundaries)
+    assert bounds[0][0] == 0 and bounds[-1][1] == 100
+    for (a, b), (c, d) in zip(bounds, bounds[1:]):
+        assert b == c
+    for _, hi in bounds[:-1]:
+        assert hi in boundaries.tolist()
+
+
+def test_driver_partitions_ivf_space_on_cluster_edges(ivf_synth):
+    """W=2 drivers over an IVFSearchSpace split on cluster boundaries
+    (each worker's shard is a run of whole clusters), and the merged
+    result still matches W=1."""
+    docs, q, index = (ivf_synth["docs"], ivf_synth["q"],
+                      ivf_synth["index"])
+    prepared = IVFPreparedCorpus(np.arange(len(docs), dtype=np.int64),
+                                 len(docs), lambda rows: docs[rows],
+                                 index, 3)
+    sized, load_chunk, to_ids = prepared.round_for(q)
+    driver = ShardedSearchDriver(n_workers=2, worker_index=0,
+                                 sharder=FairSharder(2),
+                                 score_impl="numpy", chunk_size=64)
+    bounds = driver.partition(sized)
+    edges = set(np.asarray(sized.partition_boundaries).tolist())
+    assert bounds[0][0] == 0 and bounds[-1][1] == len(sized)
+    for _, hi in bounds[:-1]:
+        assert hi in edges
+    (ref_ids, ref_vals), = _ivf_search(q, docs, index, 3, 10,
+                                       score_impl="numpy")
+    outs = _ivf_search(q, docs, index, 3, 10, world=2,
+                       score_impl="numpy")
+    for ids, vals in outs:
+        np.testing.assert_array_equal(ids, ref_ids)
+        np.testing.assert_allclose(vals, ref_vals, rtol=1e-5, atol=1e-6)
+
+
+# -- evaluator integration (real encoder, persisted index) --------------------
+
+
+@pytest.fixture(scope="module")
+def ivf_env(tiny_retriever, tiny_params, retrieval_data,
+            tmp_path_factory):
+    """Warm shared cache + flat warm-regime reference rankings."""
+    coll = RetrievalCollator(DataArguments(vocab_size=257),
+                             HashTokenizer(257))
+    cache = EmbeddingCache(str(tmp_path_factory.mktemp("ivfcache") / "c"),
+                           dim=32)
+
+    def make(rank=0, world=1, gather=None, sharder=None, **over):
+        kw = dict(topk=10, encode_batch_size=20, score_impl="numpy",
+                  metrics=("ndcg@10",))
+        kw.update(over)
+        return RetrievalEvaluator(
+            EvaluationArguments(**kw), tiny_retriever, coll, tiny_params,
+            process_index=rank, process_count=world,
+            gather=gather, sharder=sharder)
+
+    queries, corpus = retrieval_data["queries"], retrieval_data["corpus"]
+    flat = make()
+    flat.search(queries, corpus, cache=cache)           # warm the cache
+    ref = flat.search(queries, corpus, cache=cache)     # warm reference
+    return {"make": make, "cache": cache, "ref": ref,
+            "queries": queries, "corpus": corpus}
+
+
+def test_evaluator_ivf_full_probe_matches_flat(ivf_env):
+    """index_impl=ivf with nprobe == nclusters == flat rankings through
+    the evaluator (warm cache, persisted index round-trips)."""
+    ev = ivf_env["make"](index_impl="ivf", ivf_nclusters=6, ivf_nprobe=6,
+                         ivf_train_steps=8)
+    qh, ids, vals = ev.search(ivf_env["queries"], ivf_env["corpus"],
+                              cache=ivf_env["cache"])
+    rqh, rids, rvals = ivf_env["ref"]
+    np.testing.assert_array_equal(qh, rqh)
+    np.testing.assert_array_equal(ids, rids)
+    np.testing.assert_allclose(vals, rvals, rtol=1e-5, atol=1e-6)
+    # the index persisted under the cache dir and is reused verbatim
+    d = os.path.join(ivf_env["cache"].path, "ivf_k6")
+    assert os.path.exists(os.path.join(d, "meta.json"))
+    meta = json.load(open(os.path.join(d, "meta.json")))
+    st = os.stat(os.path.join(d, "perm.bin"))
+    qh2, ids2, vals2 = ev.search(ivf_env["queries"], ivf_env["corpus"],
+                                 cache=ivf_env["cache"])
+    assert os.stat(os.path.join(d, "perm.bin")).st_mtime_ns == st.st_mtime_ns
+    np.testing.assert_array_equal(ids2, ids)
+    assert meta["n"] == len(ivf_env["corpus"])
+
+
+@pytest.mark.distributed
+@pytest.mark.parametrize("world", WORLD_SIZES)
+@pytest.mark.parametrize("heap_impl", HEAP_IMPLS)
+@pytest.mark.parametrize("score_impl", SCORE_IMPLS)
+def test_evaluator_ivf_matrix(ivf_env, score_impl, heap_impl, world):
+    """The ISSUE equivalence matrix: index_impl=ivf at full probe ==
+    the seed flat rankings across score_impl × heap_impl × W, every
+    rank identical."""
+    over = dict(index_impl="ivf", ivf_nclusters=6, ivf_nprobe=6,
+                ivf_train_steps=8, score_impl=score_impl,
+                heap_impl=heap_impl)
+    queries, corpus = ivf_env["queries"], ivf_env["corpus"]
+    if world == 1:
+        outs = [ivf_env["make"](**over).search(queries, corpus,
+                                               cache=ivf_env["cache"])]
+    else:
+        cluster = SimulatedCluster(world)
+        evs = [ivf_env["make"](rank, world, cluster.gather,
+                               cluster.sharder, **over)
+               for rank in range(world)]
+        outs = cluster.run(
+            lambda rank: evs[rank].search(queries, corpus,
+                                          cache=ivf_env["cache"]))
+    rqh, rids, rvals = ivf_env["ref"]
+    for qh, ids, vals in outs:
+        np.testing.assert_array_equal(qh, rqh)
+        np.testing.assert_array_equal(ids, rids)
+        np.testing.assert_allclose(vals, rvals, rtol=1e-5, atol=1e-6)
+
+
+def test_evaluator_ivf_stale_digest_rebuilds(ivf_env, tmp_path):
+    """Changing the build knobs (digest input) rebuilds instead of
+    serving the stale persisted layout."""
+    cache = ivf_env["cache"]
+    ev1 = ivf_env["make"](index_impl="ivf", ivf_nclusters=6,
+                          ivf_nprobe=6, ivf_train_steps=8)
+    ev1.search(ivf_env["queries"], ivf_env["corpus"], cache=cache)
+    d = os.path.join(cache.path, "ivf_k6")
+    st = os.stat(os.path.join(d, "meta.json"))
+    ev2 = ivf_env["make"](index_impl="ivf", ivf_nclusters=6,
+                          ivf_nprobe=6, ivf_train_steps=9)
+    qh, ids, vals = ev2.search(ivf_env["queries"], ivf_env["corpus"],
+                               cache=cache)
+    assert os.stat(os.path.join(d, "meta.json")).st_mtime_ns \
+        != st.st_mtime_ns                       # rebuilt + re-persisted
+    np.testing.assert_array_equal(ids, ivf_env["ref"][1])
+
+
+def test_config_validates_ivf_knobs():
+    with pytest.raises(ValueError, match="index_impl"):
+        EvaluationArguments(index_impl="annoy")
+    with pytest.raises(ValueError, match="ivf_nclusters"):
+        EvaluationArguments(ivf_nclusters=0)
+    with pytest.raises(ValueError, match="ivf_nprobe"):
+        EvaluationArguments(ivf_nprobe=0)
+    with pytest.raises(ValueError, match="ivf_train_steps"):
+        EvaluationArguments(ivf_train_steps=0)
+    args = EvaluationArguments(index_impl="ivf", ivf_nclusters=4,
+                               ivf_nprobe=4)
+    assert args.index_impl == "ivf"
+
+
+@pytest.mark.serving
+def test_serve_frontend_over_ivf(ivf_env):
+    """ServeFrontend over an IVF-prepared corpus: full probe serves the
+    flat frontend's exact results per request."""
+    from repro.core.serving import ServeFrontend
+
+    queries = list(ivf_env["queries"].values())[:6]
+    flat_fe = ServeFrontend.from_evaluator(
+        ivf_env["make"](score_impl="jax"), ivf_env["corpus"],
+        ivf_env["cache"], max_wait_ms=0.5)
+    try:
+        flat_out = [flat_fe.search(t) for t in queries]
+    finally:
+        flat_fe.close()
+    ivf_fe = ServeFrontend.from_evaluator(
+        ivf_env["make"](score_impl="jax", index_impl="ivf",
+                        ivf_nclusters=6, ivf_nprobe=6,
+                        ivf_train_steps=8),
+        ivf_env["corpus"], ivf_env["cache"], max_wait_ms=0.5)
+    try:
+        for t, (rids, rvals) in zip(queries, flat_out):
+            ids, vals = ivf_fe.search(t)
+            np.testing.assert_array_equal(ids, rids)
+            np.testing.assert_allclose(vals, rvals, rtol=1e-5,
+                                       atol=1e-6)
+    finally:
+        ivf_fe.close()

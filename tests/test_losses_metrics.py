@@ -82,6 +82,26 @@ def test_compute_metrics_hand_example():
     np.testing.assert_allclose(m["map@3"], (1 / 1 + 2 / 3) / 2, rtol=1e-6)
 
 
+def test_metrics_zero_relevant_query():
+    """A query with zero relevant qrels (the combined-suite path can
+    produce them after filtering) contributes recall/map 0 — never a
+    0/0 division or a NaN in the mean."""
+    run = np.asarray([[3, 2, 1], [3, 2, 1]])
+    qrels = {0: {3: 1.0},          # one hit at rank 1
+             1: {}}                # present, but nothing relevant
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # any divide warning fails
+        m = compute_metrics(("recall@3", "map@3", "ndcg@3", "mrr@3"),
+                            run, np.asarray([0, 1]), qrels)
+    for v in m.values():
+        assert np.isfinite(v)
+    np.testing.assert_allclose(m["recall@3"], 0.5, rtol=1e-6)
+    # a query absent from qrels entirely behaves the same way
+    m2 = compute_metrics(("recall@3",), run, np.asarray([0, 7]), {0: {3: 1.0}})
+    np.testing.assert_allclose(m2["recall@3"], 0.5, rtol=1e-6)
+
+
 def test_metrics_bounds(rng):
     run = rng.integers(0, 50, size=(10, 10)).astype(np.int64)
     qrels = {q: {int(d): 1.0 for d in rng.integers(0, 50, 3)}
