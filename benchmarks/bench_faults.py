@@ -1,0 +1,130 @@
+"""Fault-tolerant search recovery under a mid-run worker kill.
+
+A W=4 resilient ``SimulatedCluster`` streams search rounds over a
+synthetic corpus; halfway through the run one worker is killed by the
+``FaultInjector`` (crash on its first chunk of the kill round).  The
+bench records:
+
+  * steady-state round latency / query throughput *before* the kill;
+  * the recovery round's latency (the survivors detect the death,
+    rescore the orphaned shard, and merge) and whether its merged
+    positions are **bitwise-equal** to the no-fault W=1 oracle with
+    full coverage — the structural recovery guarantee;
+  * steady-state latency / throughput *after* the kill, when the
+    FairSharder has repartitioned the corpus over the 3 survivors.
+
+Emits CSV rows and ``results/bench_faults.json`` (gated by
+``benchmarks/run.py --check``: bitwise/coverage metrics are exact,
+timing ratios get the usual noise tolerance).
+"""
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.faults import Fault, FaultInjector
+from repro.core.sharded_search import ShardedSearchDriver
+from repro.launch.distributed import SimulatedCluster
+
+DEFAULT_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "results", "bench_faults.json")
+
+W = 4
+N_DOCS, DIM, N_Q, K = 4096, 64, 16, 10
+CHUNK = 256
+N_ROUNDS = 9
+KILL_ROUND = 4
+
+
+def _drivers(cluster, injector):
+    return [ShardedSearchDriver(
+        n_workers=W, worker_index=rank, sharder=cluster.sharder,
+        gather=cluster.gather, score_impl="numpy", chunk_size=CHUNK,
+        fault_injector=injector, round_deadline_s=0.5,
+        retry_backoff_s=0.01)
+        for rank in range(W)]
+
+
+def run(out_json: str = DEFAULT_JSON) -> dict:
+    rng = np.random.default_rng(0)
+    docs = rng.normal(size=(N_DOCS, DIM)).astype(np.float32)
+    q = rng.normal(size=(N_Q, DIM)).astype(np.float32)
+    load = lambda lo, hi: docs[lo:hi]                     # noqa: E731
+
+    # no-fault oracle: the recovery round must replay this bitwise
+    oracle = ShardedSearchDriver(score_impl="numpy", chunk_size=CHUNK)
+    _, ref_pos = oracle.search(q, N_DOCS, load, K)
+
+    injector = FaultInjector(
+        [Fault(kind="crash", worker=1, round=KILL_ROUND, phase="load")])
+    cluster = SimulatedCluster(W, resilient=True)
+    drivers = _drivers(cluster, injector)
+
+    round_s, outs = [], []
+    for _ in range(N_ROUNDS):
+        t0 = time.monotonic()
+        out = cluster.run(lambda rank: drivers[rank].search(
+            q, N_DOCS, load, K))
+        round_s.append(time.monotonic() - t0)
+        outs.append(out[0])
+
+    assert injector.fired, "kill never fired"
+    assert cluster.health.is_dead(1)
+    recovery = outs[KILL_ROUND]
+    bitwise = float(np.array_equal(recovery[1], ref_pos))
+    coverage = float(np.asarray(recovery.coverage).min())
+    # every round — before, during, and after the kill — replays the
+    # oracle ranking (recovery keeps results exact, survivors repartition)
+    all_bitwise = float(all(np.array_equal(o[1], ref_pos) for o in outs))
+
+    # round 0 pays warmup (thread spin-up, first EMA): steady-state
+    # windows exclude it and the kill round
+    pre = round_s[1:KILL_ROUND]
+    post = round_s[KILL_ROUND + 1:]
+    pre_s, post_s = float(np.mean(pre)), float(np.mean(post))
+    rec_s = float(round_s[KILL_ROUND])
+    pre_qps, post_qps = N_Q / pre_s, N_Q / post_s
+
+    payload = {
+        "config": {"workers": W, "n_docs": N_DOCS, "dim": DIM,
+                   "n_queries": N_Q, "topk": K, "chunk_size": CHUNK,
+                   "rounds": N_ROUNDS, "kill_round": KILL_ROUND},
+        "rounds_s": round_s,
+        "headline": {
+            # structural (exact in the check gate)
+            "recovery_bitwise": bitwise,
+            "recovery_coverage": coverage,
+            "all_rounds_bitwise": all_bitwise,
+            # timing (tolerance-gated): how much slower the recovery
+            # round is than steady state, and how much throughput the
+            # 3-survivor cluster retains
+            "recovery_latency_ratio": pre_s / rec_s,
+            "post_fault_throughput_ratio": post_qps / pre_qps,
+            "pre_kill_round_ms": pre_s * 1e3,
+            "recovery_round_ms": rec_s * 1e3,
+            "post_kill_round_ms": post_s * 1e3,
+            "pre_kill_qps": pre_qps,
+            "post_kill_qps": post_qps,
+        },
+    }
+    os.makedirs(os.path.dirname(out_json), exist_ok=True)
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    h = payload["headline"]
+    emit("faults_pre_kill_round", pre_s * 1e6,
+         f"W={W} steady state {pre_qps:.0f} q/s")
+    emit("faults_recovery_round", rec_s * 1e6,
+         f"bitwise={bitwise:.0f} coverage={coverage:.2f}")
+    emit("faults_post_kill_round", post_s * 1e6,
+         f"W={W - 1} survivors {post_qps:.0f} q/s "
+         f"({h['post_fault_throughput_ratio']:.2f}x of pre-kill)")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -114,6 +114,27 @@ def _run_serve(out_json):
     return bench_serve.run(out_json=out_json)
 
 
+def _faults_metrics(payload):
+    return {
+        # structural recovery guarantees: exact
+        "fault_recovery_bitwise": payload["headline"]["recovery_bitwise"],
+        "fault_recovery_coverage":
+            payload["headline"]["recovery_coverage"],
+        "fault_all_rounds_bitwise":
+            payload["headline"]["all_rounds_bitwise"],
+        # timing: tolerance-gated
+        "fault_recovery_latency_ratio":
+            payload["headline"]["recovery_latency_ratio"],
+        "fault_post_kill_throughput_ratio":
+            payload["headline"]["post_fault_throughput_ratio"],
+    }
+
+
+def _run_faults(out_json):
+    from benchmarks import bench_faults
+    return bench_faults.run(out_json=out_json)
+
+
 # baseline file -> (fresh-run fn, metric extractor).  Metrics are all
 # higher-is-better ratios.
 CHECKS = {
@@ -123,6 +144,7 @@ CHECKS = {
     "bench_memory.json": (_run_memory, _memory_metrics),
     "bench_serve.json": (_run_serve, _serve_metrics),
     "bench_ivf.json": (_run_ivf, _ivf_metrics),
+    "bench_faults.json": (_run_faults, _faults_metrics),
 }
 
 # Structural metrics are deterministic functions of the code (dispatch /
@@ -130,7 +152,8 @@ CHECKS = {
 # noise allowance — any drop is a regression.
 EXACT_METRICS = {"dispatch_reduction", "compile_reduction",
                  "serve_completed_fraction", "ivf_full_probe_bitwise",
-                 "ivf_n_clusters"}
+                 "ivf_n_clusters", "fault_recovery_bitwise",
+                 "fault_recovery_coverage", "fault_all_rounds_bitwise"}
 
 
 def main(argv=None) -> int:

@@ -30,11 +30,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import (bench_dispatch, bench_encode, bench_ivf,
-                            bench_kernels, bench_memory, bench_multinode,
-                            bench_result_heap, bench_scaling,
-                            bench_search_backends, bench_serve,
-                            bench_ttfs)
+    from benchmarks import (bench_dispatch, bench_encode, bench_faults,
+                            bench_ivf, bench_kernels, bench_memory,
+                            bench_multinode, bench_result_heap,
+                            bench_scaling, bench_search_backends,
+                            bench_serve, bench_ttfs)
     bench_result_heap.run()
     bench_scaling.run()
     bench_ttfs.run()
@@ -46,6 +46,7 @@ def main() -> None:
     bench_encode.run()
     bench_serve.run()
     bench_ivf.run()
+    bench_faults.run()
 
 
 if __name__ == "__main__":

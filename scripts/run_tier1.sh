@@ -26,6 +26,14 @@ python -m repro.launch.serve --smoke --data-dir "$SERVE_TMP/data" \
   --max-batch 8 --max-wait-ms 2
 rm -rf "$SERVE_TMP"
 
+echo "== chaos smoke (resilient cluster: worker killed at the first steady-state round, every request still resolves) =="
+CHAOS_TMP="$(mktemp -d)"
+python -m repro.launch.serve --smoke --data-dir "$CHAOS_TMP/data" \
+  --workers 2 --resilient --chaos crash --score-impl numpy \
+  --n-requests 4 --batch 3 --concurrency 2 \
+  --max-batch 8 --max-wait-ms 2 --round-deadline-s 1
+rm -rf "$CHAOS_TMP"
+
 echo "== ivf smoke (cluster-pruned serving: build/persist index, serve with --nprobe) =="
 IVF_TMP="$(mktemp -d)"
 python -m repro.launch.serve --smoke --data-dir "$IVF_TMP/data" \

@@ -38,6 +38,11 @@ class EmbeddingCache:
         self.path = path
         self.dim = dim
         self.dtype = np.dtype(dtype)
+        # optional FaultInjector (repro.core.faults) consulted between
+        # the write steps of one append — lets chaos tests produce real
+        # torn-on-disk states (crash mid-append / before the meta
+        # commit) instead of hand-truncating files
+        self.fault_injector = None
         os.makedirs(path, exist_ok=True)
         self._vec_path = os.path.join(path, "vectors.bin")
         self._ids_path = os.path.join(path, "ids.bin")
@@ -102,8 +107,14 @@ class EmbeddingCache:
             self._truncate_uncommitted(n)
             with open(self._vec_path, "ab") as f:
                 f.write(vectors.tobytes())
+            if self.fault_injector is not None:
+                # crash mid-append: vector payload on disk, id index not
+                self.fault_injector.on_cache("payload")
             with open(self._ids_path, "ab") as f:
                 f.write(np.ascontiguousarray(hashes, _IDS_DTYPE).tobytes())
+            if self.fault_injector is not None:
+                # crash after both payloads but before the meta commit
+                self.fault_injector.on_cache("meta")
             new_n = n + len(hashes)
             tmp_meta = self._meta_path + ".tmp"
             with open(tmp_meta, "w") as f:

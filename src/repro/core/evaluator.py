@@ -203,8 +203,12 @@ class RetrievalEvaluator:
                  process_index: int | None = None,
                  process_count: int | None = None,
                  shard_merge_fn: Callable | None = None,
-                 gather=None, sharder: FairSharder | None = None):
+                 gather=None, sharder: FairSharder | None = None,
+                 fault_injector=None):
         self.args = args
+        # optional core.faults.FaultInjector threaded into every driver
+        # this evaluator builds (chaos tests, serve --chaos)
+        self.fault_injector = fault_injector
         self.retriever = retriever
         self.collator = collator
         self.params = params
@@ -358,7 +362,11 @@ class RetrievalEvaluator:
             chunk_size=self.args.encode_batch_size,
             prefetch=self.args.async_prefetch, gather=self.gather,
             superchunk_size=self.args.superchunk_size,
-            superchunk_max_mb=self.args.superchunk_max_mb)
+            superchunk_max_mb=self.args.superchunk_max_mb,
+            fault_injector=self.fault_injector,
+            round_deadline_s=self.args.round_deadline_s,
+            max_shard_retries=self.args.shard_retries,
+            retry_backoff_s=self.args.shard_retry_backoff_s)
 
     def prepare_corpus(self, corpus, cache: EmbeddingCache | None = None,
                        *, device_resident: bool = False) -> "PreparedCorpus":
@@ -517,8 +525,21 @@ class RetrievalEvaluator:
         return IVFPreparedCorpus(all_hashes, n_docs, fetch_rows, index,
                                  a.ivf_nprobe)
 
+    @staticmethod
+    def _with_coverage(items, search_out):
+        """Wrap ``items`` as a SearchOutcome when the driver's result
+        carried coverage metadata (resilient gather); plain tuple
+        otherwise — existing call sites keep unpacking unchanged."""
+        coverage = getattr(search_out, "coverage", None)
+        if coverage is None:
+            return tuple(items)
+        from repro.core.faults import SearchOutcome
+        return SearchOutcome(items, coverage=coverage,
+                             degraded=search_out.degraded)
+
     def search_prepared(self, queries, prepared: "PreparedCorpus",
-                        topk: int | None = None):
+                        topk: int | None = None,
+                        deadline_s: float | None = None):
         """:meth:`search` against an already-prepared corpus."""
         topk = topk or self.args.topk
         on_device = self.args.score_impl != "numpy"
@@ -526,23 +547,31 @@ class RetrievalEvaluator:
         q_emb = self._encode_texts(q_view.texts(), True, device=on_device)
         driver = self.make_driver()
         sized, load_chunk, to_ids = prepared.round_for(q_emb)
-        vals, pos = driver.search(q_emb, sized, load_chunk, topk)
-        return np.asarray(q_view.id_hashes), to_ids(pos), vals
+        out = driver.search(q_emb, sized, load_chunk, topk,
+                            deadline_s=deadline_s)
+        vals, pos = out
+        return self._with_coverage(
+            (np.asarray(q_view.id_hashes), to_ids(pos), vals), out)
 
     def search_texts(self, texts: Sequence[str],
                      prepared: "PreparedCorpus", topk: int | None = None,
-                     min_batch_dim: int = 8):
+                     min_batch_dim: int = 8,
+                     deadline_s: float | None = None):
         """Raw-text query search against a prepared corpus — the serve
         backends' entry point (no query-id hashing; requests demux by
-        position).  Returns ``(doc_id_hashes (Q, k), scores (Q, k))``."""
+        position).  Returns ``(doc_id_hashes (Q, k), scores (Q, k))``
+        (a ``SearchOutcome`` with per-query coverage under a resilient
+        gather)."""
         topk = topk or self.args.topk
         on_device = self.args.score_impl != "numpy"
         q_emb = self._encode_texts(list(texts), True, device=on_device,
                                    min_batch_dim=min_batch_dim)
         driver = self.make_driver()
         sized, load_chunk, to_ids = prepared.round_for(q_emb)
-        vals, pos = driver.search(q_emb, sized, load_chunk, topk)
-        return to_ids(pos), vals
+        out = driver.search(q_emb, sized, load_chunk, topk,
+                            deadline_s=deadline_s)
+        vals, pos = out
+        return self._with_coverage((to_ids(pos), vals), out)
 
     def search(self, queries, corpus, topk: int | None = None,
                cache: EmbeddingCache | None = None):
@@ -572,12 +601,22 @@ class RetrievalEvaluator:
         be keyed by raw ids or by stable hashes (``stable_id_hash`` is
         the identity on already-hashed int ids).
         """
-        q_hashes, run_ids, _ = self.search(queries, corpus, cache=cache)
+        out = self.search(queries, corpus, cache=cache)
+        q_hashes, run_ids, _ = out
         qrels_h = {
             stable_id_hash(q): {stable_id_hash(d): float(g)
                                 for d, g in docs.items()}
             for q, docs in qrels.items()}
-        return compute_metrics(self.args.metrics, run_ids, q_hashes, qrels_h)
+        report = compute_metrics(self.args.metrics, run_ids, q_hashes,
+                                 qrels_h)
+        coverage = getattr(out, "coverage", None)
+        if coverage is not None and getattr(out, "degraded", False):
+            # a degraded (partially-recovered) search: record how much
+            # of the corpus the rankings actually saw, so eval numbers
+            # from a faulted run are never mistaken for full-coverage
+            report["coverage"] = float(np.asarray(coverage).mean())
+            report["degraded"] = True
+        return report
 
     def evaluate_suite(self, scenarios: dict[str, dict], *,
                        combined: bool = True,

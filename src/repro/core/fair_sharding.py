@@ -31,9 +31,12 @@ import numpy as np
 
 
 class ShardAborted(RuntimeError):
-    """A sibling worker died mid-round; this worker's wait was released.
-    Secondary casualty — cluster runners filter it in favor of the
-    original error (like ``threading.BrokenBarrierError``)."""
+    """A sibling worker died mid-round (or a round wait timed out); this
+    worker's wait was released.  Secondary casualty — cluster runners
+    filter it in favor of the original error (like
+    ``threading.BrokenBarrierError``).  The message carries real
+    diagnostics: how many rounds committed and which workers the
+    blocking round is still waiting on."""
 
 
 class FairSharder:
@@ -47,14 +50,16 @@ class FairSharder:
         self.alpha = alpha
         self.min_share = min_share
         self.throughput = np.ones(n_workers, np.float64)
-        # round-buffered observations: worker -> items/s (None = reported
-        # with no timing signal, e.g. an empty shard)
-        self._pending: dict[int, float | None] = {}
+        # round-buffered observations, keyed per round:
+        # round -> {worker: items/s} (None = reported with no timing
+        # signal: an empty shard, or an absolved/recovered worker)
+        self._pending: dict[int, dict[int, float | None]] = {}
         self._lock = threading.Lock()
         self._cv = threading.Condition(self._lock)
         self._committed = 0                  # rounds folded into the EMA
         self._issued = [0] * n_workers       # rounds begun, per worker
         self._abort_exc: BaseException | None = None
+        self._dead: set[int] = set()
 
     def shares(self, total_items: int) -> list[int]:
         """Split ``total_items`` proportionally to throughput.
@@ -67,12 +72,24 @@ class FairSharder:
         floors are 0 and the remainder pass hands single items to the
         fastest workers, leaving the rest with empty (contiguous)
         bounds.
+
+        Workers reported dead (:meth:`mark_dead`) get an exact-zero
+        share — ``min_share`` applies to *live* workers only — so the
+        next round's partition covers the corpus with survivors alone.
         """
         assert total_items >= 0, total_items
         with self._lock:
-            w = np.maximum(self.throughput, 1e-9)
-        frac = np.maximum(w / w.sum(), self.min_share)
-        frac = frac / frac.sum()
+            w = np.maximum(self.throughput, 1e-9).copy()
+            dead = set(self._dead)
+        if len(dead) >= self.n:
+            raise ShardAborted(
+                f"all {self.n} workers are dead; no survivor left to "
+                f"shard {total_items} items across")
+        live = np.array([wk not in dead for wk in range(self.n)])
+        w[~live] = 0.0
+        frac = np.zeros(self.n, np.float64)
+        lf = np.maximum(w[live] / w[live].sum(), self.min_share)
+        frac[live] = lf / lf.sum()
         sizes = np.floor(frac * total_items).astype(int)
         rem = int(total_items - sizes.sum())
         # a remainder beyond n means frac was not normalized — the old
@@ -80,9 +97,10 @@ class FairSharder:
         assert 0 <= rem <= self.n, (
             f"floor remainder {rem} outside [0, {self.n}] "
             f"(total_items={total_items}, frac sum={frac.sum()!r})")
-        order = np.argsort(-w, kind="stable")
+        live_order = [int(i) for i in np.argsort(-w, kind="stable")
+                      if live[i]]
         for i in range(rem):
-            sizes[order[i % self.n]] += 1
+            sizes[live_order[i % len(live_order)]] += 1
         return sizes.tolist()
 
     def bounds(self, total_items: int,
@@ -117,9 +135,22 @@ class FairSharder:
         starts = np.concatenate([[0], ends[:-1]])
         return list(zip(starts.tolist(), ends.tolist()))
 
-    def acquire_bounds(self, worker: int, total_items: int,
-                       boundaries=None) -> list[tuple[int, int]]:
-        """Round-versioned :meth:`bounds` for pipelined multi-round use.
+    def _round_diagnostics(self) -> str:
+        """Lock held.  Which round is blocking and who hasn't reported."""
+        bucket = self._pending.get(self._committed, {})
+        missing = [wk for wk in range(self.n)
+                   if wk not in self._dead and wk not in bucket]
+        parts = [f"rounds 0..{self._committed - 1} committed"
+                 if self._committed else "no round committed yet",
+                 f"round {self._committed} still pending reports from "
+                 f"workers {missing}"]
+        if self._dead:
+            parts.append(f"dead workers: {sorted(self._dead)}")
+        return "; ".join(parts)
+
+    def acquire(self, worker: int, total_items: int,
+                boundaries=None) -> tuple[int, list[tuple[int, int]]]:
+        """Round-versioned partition: ``(round_no, bounds)``.
 
         A worker's r-th call blocks until rounds ``0..r-1`` have all
         committed, so every worker reads the *same* EMA state for the
@@ -132,6 +163,11 @@ class FairSharder:
 
         Never blocks when rounds are already ordered (sync path, or
         ``n == 1``) — the wait condition is satisfied on entry.
+
+        The returned ``round_no`` is the sharder-global round this
+        partition belongs to — the key the fault-tolerant gather and
+        round-tagged :meth:`update` use, and stable even when the caller
+        constructs a fresh driver per round (the serve cluster backend).
         """
         with self._cv:
             r = self._issued[worker]
@@ -140,50 +176,102 @@ class FairSharder:
             while self._committed < r and self._abort_exc is None:
                 remaining = deadline - time.monotonic()
                 if remaining <= 0:
-                    raise RuntimeError(
-                        f"worker {worker} waited {self.ACQUIRE_TIMEOUT_S}"
-                        f"s for round {r - 1} to commit "
-                        f"({self._committed} committed) — a sibling "
-                        f"worker likely died before reporting")
+                    raise ShardAborted(
+                        f"worker {worker} waited "
+                        f"{self.ACQUIRE_TIMEOUT_S}s for round {r - 1} "
+                        f"to commit: {self._round_diagnostics()}")
                 self._cv.wait(remaining)
             if self._abort_exc is not None:
-                raise ShardAborted("sharder aborted: a sibling worker "
-                                   "died mid-round") from self._abort_exc
+                raise ShardAborted(
+                    f"sharder aborted while worker {worker} waited for "
+                    f"round {r}: {self._round_diagnostics()}"
+                ) from self._abort_exc
         # safe outside the lock: round r cannot commit (and move the
         # EMA) until THIS worker reports it, which happens only after
         # the caller scores the slice these bounds describe
-        return self.bounds(total_items, boundaries)
+        return r, self.bounds(total_items, boundaries)
+
+    def acquire_bounds(self, worker: int, total_items: int,
+                       boundaries=None) -> list[tuple[int, int]]:
+        """:meth:`acquire` without the round number (legacy callers)."""
+        return self.acquire(worker, total_items, boundaries)[1]
 
     def abort(self, exc: BaseException | None = None) -> None:
-        """Release workers blocked in :meth:`acquire_bounds` when a
-        sibling dies mid-round (mirrors the gather transports' abort)."""
+        """Release workers blocked in :meth:`acquire` when a sibling
+        dies mid-round (mirrors the gather transports' abort)."""
         with self._cv:
             self._abort_exc = exc if exc is not None else RuntimeError(
                 "aborted")
             self._cv.notify_all()
 
-    def update(self, worker: int, items: int, seconds: float):
+    def mark_dead(self, worker: int) -> None:
+        """Remove ``worker`` from the cluster: it gets exact-zero shares
+        from now on (see :meth:`shares`) and rounds stop waiting for its
+        reports — any round blocked solely on it commits immediately.
+        Unlike :meth:`abort`, survivors keep running."""
+        with self._cv:
+            self._dead.add(worker)
+            self._try_commit_locked()
+            self._cv.notify_all()
+
+    def absolve(self, worker: int, round_no: int) -> None:
+        """Count ``worker`` as having reported ``round_no`` without a
+        throughput observation — used when its shard was recovered by a
+        survivor (or given up) so the round can commit without it.  A
+        no-op for already-committed rounds."""
+        with self._cv:
+            if round_no < self._committed:
+                return
+            self._pending.setdefault(round_no, {}).setdefault(worker,
+                                                              None)
+            self._try_commit_locked()
+
+    def update(self, worker: int, items: int, seconds: float,
+               round_no: int | None = None):
         """Report one worker's round observation.
 
-        The observation is buffered; once all ``n`` workers have
-        reported the round, every buffered observation folds into the
-        EMA atomically and the round resets.  (With ``n == 1`` this is
-        an immediate update.)  A worker with an empty shard reports with
-        ``items == 0`` and counts toward round completion without moving
-        its EMA.
+        The observation is buffered per round; once every *live* worker
+        has reported (or been absolved for) the oldest uncommitted
+        round, its observations fold into the EMA atomically and the
+        round commits.  (With ``n == 1`` this is an immediate update.)
+        A worker with an empty shard reports ``items == 0`` and counts
+        toward round completion without moving its EMA.
+
+        ``round_no`` tags the observation with the round it belongs to
+        (from :meth:`acquire`).  Without it, the report lands on the
+        earliest uncommitted round this worker hasn't reported — the
+        pre-fault-tolerance behavior.  Reports for already-committed
+        rounds (a stalled straggler finishing after its shard was
+        recovered) are dropped.
         """
-        with self._lock:
+        with self._cv:
+            if round_no is None:
+                round_no = self._committed
+                while worker in self._pending.get(round_no, {}):
+                    round_no += 1
+            if round_no < self._committed:
+                return                      # recovered behind its back
+            bucket = self._pending.setdefault(round_no, {})
             if items > 0 and seconds > 0:
-                self._pending[worker] = items / seconds
+                bucket[worker] = items / seconds
             else:
-                self._pending.setdefault(worker, None)
-            if len(self._pending) < self.n:
+                bucket.setdefault(worker, None)
+            self._try_commit_locked()
+
+    def _try_commit_locked(self) -> None:
+        """Commit every leading round whose live workers all reported."""
+        while True:
+            needed = [wk for wk in range(self.n) if wk not in self._dead]
+            if not needed:
+                return                      # cluster fully dead
+            bucket = self._pending.get(self._committed)
+            if bucket is None or any(wk not in bucket for wk in needed):
                 return
-            for wk, obs in self._pending.items():
-                if obs is not None:
+            for wk, obs in bucket.items():
+                if obs is not None and wk not in self._dead:
                     self.throughput[wk] = (
                         self.alpha * obs
                         + (1 - self.alpha) * self.throughput[wk])
-            self._pending.clear()
+            del self._pending[self._committed]
             self._committed += 1
             self._cv.notify_all()

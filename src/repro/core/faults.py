@@ -1,0 +1,524 @@
+"""Fault injection + fault-tolerant shard recovery (the chaos layer).
+
+The distributed search stack (``ShardedSearchDriver`` + ``FairSharder``
++ ``SimulatedCluster``) used to be all-or-nothing: one worker dying
+mid-round propagated ``ShardAborted`` to every sibling and the whole
+round — including accepted serve requests riding on it — died with it.
+This module turns that into *degrade, don't collapse*:
+
+  * :class:`FaultInjector` — a deterministic, schedule- or seed-driven
+    injector for every failure mode the stack can hit, so chaos tests
+    are reproducible in-process: worker **crash** at round r, **stall**
+    (slow chunk loads), gather transport **drop** (a worker's merged
+    state never arrives), and **torn cache writes** (crash mid-append /
+    between payload and ``meta.json``).
+  * :class:`WorkerHealth` — liveness tracking for a W-worker cluster,
+    fed by the *same* :class:`repro.training.fault_tolerance.Heartbeat`
+    implementation the trainer uses (one heartbeat, two consumers).
+  * :class:`ResilientAllGather` — the fault-tolerant replacement for
+    ``InMemoryAllGather``: per-round worker deadlines; a missed deadline
+    or death notice orphans that worker's shard, which survivors rescore
+    (bounded retries + exponential backoff, deterministic assignee) and
+    merge **at the dead rank's merge position** — so a recovered round
+    is bitwise-equal to the no-fault round (same rows, same kernels,
+    same merge order).  When the retry budget or the request deadline is
+    exhausted, the round resolves to a *partial* top-k annotated with
+    corpus coverage < 1 instead of raising.
+  * :class:`SearchOutcome` — a ``(a, b[, c])``-unpackable tuple carrying
+    ``coverage`` (per-query fraction of the search space actually
+    scored) and a ``degraded`` flag, so every existing call site keeps
+    unpacking results while fault-aware callers read the metadata.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    """Base class for scheduled failures raised by :class:`FaultInjector`."""
+
+
+class InjectedCrash(InjectedFault):
+    """A scheduled worker (or cache-write) crash."""
+
+
+class InjectedTransportDrop(InjectedFault):
+    """A scheduled gather-transport loss: the worker survives but its
+    merged shard state never reaches its siblings."""
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One scheduled failure.  ``None`` fields are wildcards.
+
+    kind : ``crash`` | ``stall`` | ``drop`` | ``torn_write``
+    round : search round (the FairSharder's issued round number) the
+        fault fires in; ``None`` = any round.
+    worker : target rank; ``None`` = any worker.
+    phase : ``load`` (primary chunk streaming) | ``retry`` (a survivor
+        rescoring an orphaned shard) | ``gather`` | ``cache``.
+    chunk : fire on the n-th chunk event of the matching scoring pass
+        (crash/stall only); ``None`` = the first.
+    point : torn-write location: ``payload`` (between the vector payload
+        and the id-index append — a mid-append crash) or ``meta``
+        (payloads written, ``meta.json`` never replaced).
+    stall_s : sleep duration for ``stall``.
+    repeat : fire on every matching event instead of once.
+    """
+
+    kind: str
+    round: int | None = None
+    worker: int | None = None
+    phase: str = "load"
+    chunk: int | None = None
+    point: str = "payload"
+    stall_s: float = 0.25
+    repeat: bool = False
+
+    def __post_init__(self):
+        if self.kind not in ("crash", "stall", "drop", "torn_write"):
+            raise ValueError(f"unknown fault kind {self.kind!r}")
+        if self.phase not in ("load", "retry", "gather", "cache"):
+            raise ValueError(f"unknown fault phase {self.phase!r}")
+        if self.point not in ("payload", "meta"):
+            raise ValueError(f"unknown torn-write point {self.point!r}")
+
+
+class FaultInjector:
+    """Deterministic fault scheduler.
+
+    Construct with an explicit fault list, or :meth:`from_seed` for a
+    seed-derived schedule (same seed → same faults, always).  The stack
+    consults the injector at its named fault points (chunk loads, gather
+    sends, cache writes); each :class:`Fault` fires once (unless
+    ``repeat``) and every firing is recorded in :attr:`fired` for
+    assertions.  Thread-safe — one injector may be shared by all workers
+    of a simulated cluster.
+    """
+
+    def __init__(self, faults=()):
+        self.faults = list(faults)
+        self.fired: list[tuple] = []
+        self._spent: set[int] = set()
+        self._lock = threading.Lock()
+
+    @classmethod
+    def from_seed(cls, seed: int, n_workers: int, *, n_faults: int = 1,
+                  rounds: tuple[int, int] = (0, 4),
+                  kinds=("crash", "stall", "drop"),
+                  stall_s: float = 0.25) -> "FaultInjector":
+        """A reproducible schedule: ``n_faults`` draws of (kind, worker,
+        round) from ``default_rng(seed)``."""
+        rng = np.random.default_rng(seed)
+        faults = [Fault(kind=str(rng.choice(list(kinds))),
+                        worker=int(rng.integers(0, n_workers)),
+                        round=int(rng.integers(rounds[0], rounds[1])),
+                        stall_s=stall_s)
+                  for _ in range(n_faults)]
+        return cls(faults)
+
+    def _match(self, kind_set, worker, round_no, phase) -> Fault | None:
+        with self._lock:
+            for idx, f in enumerate(self.faults):
+                if f.kind not in kind_set or f.phase != phase:
+                    continue
+                if f.worker is not None and worker is not None \
+                        and f.worker != worker:
+                    continue
+                if f.round is not None and round_no is not None \
+                        and f.round != round_no:
+                    continue
+                if not f.repeat and idx in self._spent:
+                    continue
+                self._spent.add(idx)
+                self.fired.append((f.kind, worker, round_no, phase))
+                return f
+        return None
+
+    # -- fault points ---------------------------------------------------------
+    def on_chunk(self, worker: int, round_no: int, chunk_index: int,
+                 phase: str = "load") -> None:
+        """Called before each streamed chunk is scored.  May raise
+        :class:`InjectedCrash` (the worker dies here) or sleep (a stalled
+        / slow chunk load)."""
+        with self._lock:
+            candidates = [
+                (idx, f) for idx, f in enumerate(self.faults)
+                if f.kind in ("crash", "stall") and f.phase == phase
+                and (f.worker is None or f.worker == worker)
+                and (f.round is None or f.round == round_no)
+                and (f.chunk or 0) == chunk_index
+                and (f.repeat or idx not in self._spent)]
+            if not candidates:
+                return
+            idx, f = candidates[0]
+            self._spent.add(idx)
+            self.fired.append((f.kind, worker, round_no, phase))
+        if f.kind == "crash":
+            raise InjectedCrash(
+                f"injected crash: worker {worker} round {round_no} "
+                f"chunk {chunk_index} ({phase})")
+        time.sleep(f.stall_s)
+
+    def on_gather(self, worker: int, round_no: int) -> None:
+        """Called when a worker hands its shard state to the gather
+        transport; raises :class:`InjectedTransportDrop` when this
+        worker's state is scheduled to be lost in flight."""
+        f = self._match(("drop",), worker, round_no, "gather")
+        if f is not None:
+            raise InjectedTransportDrop(
+                f"injected transport drop: worker {worker} round "
+                f"{round_no}")
+
+    def on_cache(self, point: str) -> None:
+        """Called by :class:`~repro.core.embedding_cache.EmbeddingCache`
+        between the write steps of one append; raises
+        :class:`InjectedCrash` to simulate a process dying with a torn
+        append on disk."""
+        with self._lock:
+            for idx, f in enumerate(self.faults):
+                if f.kind != "torn_write" or f.point != point:
+                    continue
+                if not f.repeat and idx in self._spent:
+                    continue
+                self._spent.add(idx)
+                self.fired.append((f.kind, None, None, f"cache:{point}"))
+                break
+            else:
+                return
+        raise InjectedCrash(f"injected torn write at cache point "
+                            f"{point!r}")
+
+
+class SearchOutcome(tuple):
+    """A result tuple that still unpacks like the plain tuple every call
+    site expects, plus the fault-tolerance metadata riding along:
+
+    ``coverage``  — per-query fraction of the round's search space that
+        was actually scored (``1.0`` everywhere on a clean or fully
+        recovered round).
+    ``degraded``  — True when any coverage < 1 (retry budget or request
+        deadline exhausted mid-recovery).
+    """
+
+    coverage: np.ndarray | None
+    degraded: bool
+
+    def __new__(cls, items, coverage=None, degraded: bool = False):
+        self = super().__new__(cls, tuple(items))
+        self.coverage = coverage
+        self.degraded = bool(degraded)
+        return self
+
+
+def full_coverage(n_queries: int) -> np.ndarray:
+    return np.ones(n_queries, np.float32)
+
+
+# -- worker health ------------------------------------------------------------
+
+
+class WorkerHealth:
+    """Liveness board for a W-worker cluster.
+
+    Workers prove liveness through the *training stack's*
+    :class:`~repro.training.fault_tolerance.Heartbeat` (``sink``-wired
+    into :meth:`beat` — one heartbeat implementation serves training and
+    serving).  Deaths are reported explicitly (:meth:`mark_dead`, e.g.
+    a worker thread raising) or inferred from heartbeat staleness
+    (:meth:`failed` with ``stale_after_s``).
+    """
+
+    def __init__(self, n_workers: int, stale_after_s: float | None = None):
+        self.n_workers = n_workers
+        self.stale_after_s = stale_after_s
+        self._last_beat = [time.monotonic()] * n_workers
+        self._dead: set[int] = set()
+        self._lock = threading.Lock()
+
+    def beat(self, worker: int, step: int = 0) -> None:
+        with self._lock:
+            self._last_beat[worker] = time.monotonic()
+
+    def heartbeat(self, worker: int, interval: float = 0.05):
+        """A :class:`~repro.training.fault_tolerance.Heartbeat` context
+        whose sink feeds this board instead of a watchdog file."""
+        from repro.training.fault_tolerance import Heartbeat
+        return Heartbeat(interval=interval,
+                         sink=lambda payload: self.beat(
+                             worker, payload.get("step", 0)))
+
+    def mark_dead(self, worker: int) -> None:
+        with self._lock:
+            self._dead.add(worker)
+
+    def is_dead(self, worker: int) -> bool:
+        with self._lock:
+            return worker in self._dead
+
+    @property
+    def dead(self) -> set[int]:
+        with self._lock:
+            return set(self._dead)
+
+    def live(self) -> list[int]:
+        with self._lock:
+            return [w for w in range(self.n_workers)
+                    if w not in self._dead]
+
+    def failed(self, worker: int) -> bool:
+        """Dead, or heartbeat-stale beyond ``stale_after_s``."""
+        with self._lock:
+            if worker in self._dead:
+                return True
+            if self.stale_after_s is None:
+                return False
+            return (time.monotonic() - self._last_beat[worker]
+                    > self.stale_after_s)
+
+
+# -- resilient gather ---------------------------------------------------------
+
+
+@dataclass
+class _Round:
+    """Book-keeping for one search round's gather/recovery."""
+
+    bounds: list[tuple[int, int]]
+    total: int
+    n_queries: int = 0
+    k: int = 0
+    impl: str = "jax"
+    t0: float = field(default_factory=time.monotonic)
+    # rank -> finalized (vals, ids); recovery installs at the orphan rank
+    contrib: dict[int, tuple] = field(default_factory=dict)
+    # ranks whose state is known lost for this round (drop faults)
+    undelivered: set[int] = field(default_factory=set)
+    given_up: set[int] = field(default_factory=set)
+    claimed: dict[int, int] = field(default_factory=dict)   # rank->claimer
+    attempts: dict[int, int] = field(default_factory=dict)
+    participants: set[int] = field(default_factory=set)
+    deadline: float | None = None          # absolute request deadline
+    merged: tuple | None = None            # (vals, ids, coverage)
+
+
+class ResilientAllGather:
+    """Fault-tolerant in-process shard gather (allgather semantics).
+
+    Drop-in for ``InMemoryAllGather`` when the driver supplies a round
+    context: contributions are keyed per (round, rank); instead of a
+    barrier, each worker waits on a condition variable until every
+    expected shard state is present — and when one is *not* (its owner
+    died, its transport send was dropped, or its per-round deadline
+    lapsed), a deterministically-chosen survivor rescans the orphaned
+    shard with the caller-provided ``rescore`` callback (the same
+    kernels over the same rows) and installs the result at the orphan's
+    merge position.  Recovery retries are bounded with exponential
+    backoff; on exhaustion — or when the round's request deadline
+    expires — the round resolves *partial*: the merged top-k over the
+    shards that did arrive, with coverage < 1.
+
+    Every worker of a round returns the identical merged arrays (the
+    merge is computed once, under the round lock, in ascending rank
+    order — exactly the order ``InMemoryAllGather`` and
+    ``ProcessAllGather`` merge in, so a fully-recovered round is
+    bitwise-equal to the no-fault round).
+    """
+
+    # how long a waiter sleeps between re-evaluations when no wake-up
+    # (death notice / contribution) arrives
+    _POLL_S = 0.02
+    # retain this many resolved rounds so a stalled straggler waking up
+    # late can still fetch its round's merged result
+    _KEEP_ROUNDS = 16
+
+    def __init__(self, world_size: int, health: WorkerHealth | None = None,
+                 sharder=None):
+        self.world_size = world_size
+        self.health = health if health is not None else WorkerHealth(
+            world_size)
+        self.sharder = sharder
+        self._rounds: dict[int, _Round] = {}
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+
+    # -- cluster-side notifications -------------------------------------------
+    def notify_death(self, worker: int) -> None:
+        """A worker thread died; wake all waiters so its shards get
+        reassigned immediately instead of after the round deadline."""
+        self.health.mark_dead(worker)
+        with self._cv:
+            self._cv.notify_all()
+
+    # -- legacy barrier-style entry point (no round context) ------------------
+    def merge(self, heap, worker_index: int):
+        """Compatibility shim: without a round context there is nothing
+        to recover, so behave like a 1-round resilient merge keyed by an
+        internal counter is impossible — resilient merging requires the
+        driver's round number.  Drivers always pass a context; anything
+        else should use ``InMemoryAllGather``."""
+        raise TypeError(
+            "ResilientAllGather requires the driver's round context; "
+            "use InMemoryAllGather for barrier-style merging")
+
+    # -- the resilient merge --------------------------------------------------
+    def _get_round(self, round_no: int, bounds, heap) -> _Round:
+        st = self._rounds.get(round_no)
+        if st is None:
+            total = max((hi for _, hi in bounds), default=0)
+            st = _Round(bounds=list(bounds), total=total,
+                        n_queries=heap.n_queries, k=heap.k, impl=heap.impl)
+            self._rounds[round_no] = st
+            for r in [r for r in self._rounds
+                      if r < round_no - self._KEEP_ROUNDS]:
+                del self._rounds[r]
+        return st
+
+    def _expected_ranks(self, st: _Round) -> list[int]:
+        return [rank for rank, (lo, hi) in enumerate(st.bounds) if hi > lo]
+
+    def _pending_ranks(self, st: _Round) -> list[int]:
+        return [r for r in self._expected_ranks(st)
+                if r not in st.contrib and r not in st.given_up]
+
+    def _absolve(self, rank: int, round_no: int) -> None:
+        """Count a recovered/abandoned worker's round as reported so the
+        FairSharder's round commit doesn't wait forever for it."""
+        if self.sharder is not None:
+            absolve = getattr(self.sharder, "absolve", None)
+            if absolve is not None:
+                absolve(rank, round_no)
+
+    def _compute_merge(self, st: _Round, round_no: int) -> tuple:
+        """Merge present contributions in ascending rank order (the
+        transports' canonical order) — called once per round, under the
+        round lock."""
+        from repro.core.result_heap import FastResultHeapq
+        merged = FastResultHeapq(st.n_queries, st.k, impl=st.impl)
+        covered = 0
+        for rank in sorted(st.contrib):
+            merged.merge_arrays(*st.contrib[rank])
+            lo, hi = st.bounds[rank]
+            covered += hi - lo
+        vals, ids = merged.finalize()
+        cov = 1.0 if st.total == 0 else covered / st.total
+        coverage = np.full(st.n_queries, cov, np.float32)
+        st.merged = (vals, ids, coverage)
+        for rank in self._pending_ranks(st):
+            # round resolved without them: absolve so the sharder commits
+            st.given_up.add(rank)
+            self._absolve(rank, round_no)
+        self._cv.notify_all()
+        return st.merged
+
+    def _owner_failed(self, st: _Round, rank: int,
+                      round_deadline_s: float) -> bool:
+        if rank in st.undelivered or self.health.failed(rank):
+            return True
+        return time.monotonic() > st.t0 + round_deadline_s
+
+    def merge_resilient(self, heap, worker_index: int, round_no: int,
+                        bounds, rescore, *, dropped: bool = False,
+                        round_deadline_s: float = 30.0,
+                        max_retries: int = 2,
+                        backoff_s: float = 0.05,
+                        deadline_s: float | None = None):
+        """One worker's gather for ``round_no``.
+
+        ``bounds`` is the round's full per-rank partition (identical on
+        every caller — they come from the round-versioned
+        ``FairSharder.acquire``); ``rescore(lo, hi) -> (vals, ids)``
+        re-runs this driver's scoring phase over an orphaned shard.
+        ``dropped`` marks this worker's own contribution as lost in
+        flight (it participates in recovery but does not install its
+        state directly).  Returns ``(vals, ids, coverage)``.
+        """
+        vals, ids = heap.finalize()
+        my_lo, my_hi = bounds[worker_index]
+        with self._cv:
+            st = self._get_round(round_no, bounds, heap)
+            st.participants.add(worker_index)
+            if deadline_s is not None:
+                abs_deadline = time.monotonic() + deadline_s
+                st.deadline = (abs_deadline if st.deadline is None
+                               else min(st.deadline, abs_deadline))
+            if dropped:
+                st.undelivered.add(worker_index)
+            elif (st.merged is None and my_hi > my_lo
+                  and worker_index not in st.contrib):
+                # a straggler arriving after its shard was recovered and
+                # the round merged must not mutate the resolved round
+                st.contrib[worker_index] = (vals, ids)
+            self._cv.notify_all()
+
+        while True:
+            rescue = None
+            with self._cv:
+                if st.merged is not None:
+                    return st.merged
+                pending = self._pending_ranks(st)
+                unclaimed = [r for r in pending if r not in st.claimed]
+                if not pending:
+                    return self._compute_merge(st, round_no)
+                now = time.monotonic()
+                if st.deadline is not None and now > st.deadline:
+                    # request deadline exhausted: resolve partial NOW —
+                    # in-flight recoveries are abandoned (their install
+                    # finds the round already merged)
+                    for r in pending:
+                        st.given_up.add(r)
+                        self._absolve(r, round_no)
+                    return self._compute_merge(st, round_no)
+                actionable = [r for r in unclaimed
+                              if self._owner_failed(st, r,
+                                                    round_deadline_s)]
+                if actionable:
+                    # deterministic assignee: survivors (participants
+                    # not dead) sorted by rank, rotated by attempt count
+                    rank = actionable[0]
+                    dead = self.health.dead
+                    cands = sorted(p for p in st.participants
+                                   if p not in dead)
+                    if not cands:
+                        # nobody left to rescue — resolve partial
+                        for r in pending:
+                            st.given_up.add(r)
+                            self._absolve(r, round_no)
+                        return self._compute_merge(st, round_no)
+                    attempt = st.attempts.get(rank, 0)
+                    assignee = cands[(rank + attempt) % len(cands)]
+                    if assignee == worker_index:
+                        st.claimed[rank] = worker_index
+                        rescue = (rank, attempt)
+                    else:
+                        self._cv.wait(self._POLL_S)
+                else:
+                    self._cv.wait(self._POLL_S)
+            if rescue is None:
+                continue
+            rank, attempt = rescue
+            lo, hi = st.bounds[rank]
+            if attempt:
+                time.sleep(backoff_s * (2 ** (attempt - 1)))
+            try:
+                r_vals, r_ids = rescore(lo, hi)
+            except BaseException:          # noqa: BLE001 — retried below
+                with self._cv:
+                    st.claimed.pop(rank, None)
+                    st.attempts[rank] = attempt + 1
+                    if st.attempts[rank] > max_retries:
+                        st.given_up.add(rank)
+                        self._absolve(rank, round_no)
+                    self._cv.notify_all()
+                continue
+            with self._cv:
+                st.claimed.pop(rank, None)
+                if st.merged is None and rank not in st.contrib:
+                    st.contrib[rank] = (r_vals, r_ids)
+                    self._absolve(rank, round_no)
+                self._cv.notify_all()

@@ -45,13 +45,17 @@ driver and a :class:`~repro.core.evaluator.PreparedCorpus`) and
 
 from __future__ import annotations
 
+import inspect
 import queue
 import threading
 import time
 from concurrent.futures import Future
+from concurrent.futures import TimeoutError as _FutureTimeout
 from typing import Callable, Sequence
 
 import numpy as np
+
+from repro.core.faults import SearchOutcome
 
 
 class ServeError(RuntimeError):
@@ -68,14 +72,32 @@ class ServeClosedError(ServeError):
     requests."""
 
 
-class _Request:
-    __slots__ = ("texts", "n", "future", "t_submit")
+class ServeTimeoutError(ServeError):
+    """A blocking :meth:`ServeFrontend.search` wait timed out; the
+    request was marked abandoned so the dispatcher skips it instead of
+    encoding/scoring work nobody will read."""
 
-    def __init__(self, texts: list[str]):
+
+class _Request:
+    __slots__ = ("texts", "n", "future", "t_submit", "deadline",
+                 "abandoned")
+
+    def __init__(self, texts: list[str], deadline_ms: float | None = None):
         self.texts = texts
         self.n = len(texts)
         self.future: Future = Future()
         self.t_submit = time.monotonic()
+        # absolute deadline: past it the request resolves degraded-empty
+        # (coverage 0) instead of being scored — never dropped
+        self.deadline = (None if deadline_ms is None
+                         else self.t_submit + deadline_ms / 1e3)
+        # set when a blocking search() wait gave up on this request;
+        # its Future is already resolved (ServeTimeoutError), so the
+        # dispatcher skips it entirely
+        self.abandoned = False
+
+    def remaining_s(self, now: float) -> float | None:
+        return None if self.deadline is None else self.deadline - now
 
 
 _SENTINEL = object()
@@ -105,7 +127,8 @@ class EvaluatorServeBackend:
             corpus, cache=cache, device_resident=device_resident)
         self.driver = evaluator.make_driver()
 
-    def begin(self, texts: Sequence[str], topk: int) -> Future:
+    def begin(self, texts: Sequence[str], topk: int,
+              deadline_s: float | None = None) -> Future:
         q_emb = self.ev._encode_texts(list(texts), True,
                                       device=self.on_device,
                                       min_batch_dim=self.min_batch_dim)
@@ -113,13 +136,20 @@ class EvaluatorServeBackend:
         # an IVF-prepared corpus derives this micro-batch's pruned
         # search space (top-nprobe clusters) from the query embeddings
         sized, load_chunk, to_ids = self.prepared.round_for(q_emb)
-        inner = self.driver.search_async(q_emb, sized, load_chunk, topk)
+        inner = self.driver.search_async(q_emb, sized, load_chunk, topk,
+                                         deadline_s=deadline_s)
         outer: Future = Future()
 
         def _done(f: Future) -> None:
             try:
-                vals, pos = f.result()
-                outer.set_result((to_ids(pos), vals))
+                out = f.result()
+                vals, pos = out
+                coverage = getattr(out, "coverage", None)
+                result = (to_ids(pos), vals)
+                if coverage is not None:
+                    result = SearchOutcome(result, coverage=coverage,
+                                           degraded=out.degraded)
+                outer.set_result(result)
             except BaseException as exc:   # noqa: BLE001 — routed to caller
                 outer.set_exception(exc)
 
@@ -152,11 +182,13 @@ class ClusterServeBackend:
                               device_resident=device_resident)
             for ev, c in zip(self.evs, caches)]
 
-    def run(self, texts: Sequence[str], topk: int):
+    def run(self, texts: Sequence[str], topk: int,
+            deadline_s: float | None = None):
         outs = self.cluster.run(
             lambda rank: self.evs[rank].search_texts(
                 texts, self.prepared[rank], topk,
-                min_batch_dim=self.min_batch_dim))
+                min_batch_dim=self.min_batch_dim,
+                deadline_s=deadline_s))
         return outs[0]
 
 
@@ -203,7 +235,18 @@ class ServeFrontend:
         self.stats = {"accepted": 0, "rejected": 0, "completed": 0,
                       "failed": 0, "batches": 0, "queries": 0,
                       "flush_full": 0, "flush_deadline": 0,
-                      "flush_drain": 0, "max_batch_seen": 0}
+                      "flush_drain": 0, "max_batch_seen": 0,
+                      "abandoned": 0, "expired": 0, "degraded": 0}
+        # does the backend accept a deadline_s kwarg (per-request
+        # deadlines threaded down to the driver's recovery budget)?
+        target = getattr(backend, "begin", None)
+        if target is None:
+            target = getattr(backend, "run", backend)
+        try:
+            self._backend_deadline = ("deadline_s" in
+                                      inspect.signature(target).parameters)
+        except (TypeError, ValueError):
+            self._backend_deadline = False
         self._queue: queue.Queue = queue.Queue(maxsize=max_queue)
         self._carry: _Request | None = None
         self._lock = threading.Lock()
@@ -252,15 +295,7 @@ class ServeFrontend:
             max_queue=a.serve_max_queue if max_queue is None else max_queue)
 
     # -- request admission ----------------------------------------------------
-    def submit(self, request) -> Future:
-        """Accept one request — a single query text, a sequence of
-        texts, or an ``{id: text}`` dict — and return a Future resolving
-        to ``(doc_id_hashes (q, topk), scores (q, topk))`` with one row
-        per query, in request order.
-
-        Raises :class:`ServeOverloadError` when the queue is full and
-        :class:`ServeClosedError` after :meth:`close`.
-        """
+    def _submit(self, request, deadline_ms: float | None) -> _Request:
         if isinstance(request, str):
             texts = [request]
         elif isinstance(request, dict):
@@ -273,7 +308,10 @@ class ServeFrontend:
             raise ValueError(
                 f"request of {len(texts)} queries exceeds max_batch="
                 f"{self.max_batch}")
-        req = _Request(texts)
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be > 0, got {deadline_ms}")
+        req = _Request(texts, deadline_ms)
         with self._lock:
             if self._closed:
                 raise ServeClosedError("frontend is closed")
@@ -285,22 +323,96 @@ class ServeFrontend:
                     f"queue full ({self._queue.maxsize} pending "
                     f"requests); retry with backoff") from None
             self.stats["accepted"] += 1
-        return req.future
+        return req
 
-    def search(self, request, timeout: float | None = None):
-        """Blocking convenience wrapper: submit + wait."""
-        return self.submit(request).result(timeout)
+    def submit(self, request, deadline_ms: float | None = None) -> Future:
+        """Accept one request — a single query text, a sequence of
+        texts, or an ``{id: text}`` dict — and return a Future resolving
+        to ``(doc_id_hashes (q, topk), scores (q, topk))`` with one row
+        per query, in request order.
+
+        ``deadline_ms`` bounds the request's total latency: a request
+        still queued past its deadline resolves immediately with a
+        degraded empty result (ids ``-1``, coverage 0) instead of being
+        scored, and a dispatched one hands its remaining budget to the
+        backend as the shard-recovery deadline — either way the Future
+        resolves (accepted requests are never dropped).  Degraded
+        results are :class:`~repro.core.faults.SearchOutcome` tuples
+        with ``.degraded``/``.coverage`` set.
+
+        Raises :class:`ServeOverloadError` when the queue is full and
+        :class:`ServeClosedError` after :meth:`close`.
+        """
+        return self._submit(request, deadline_ms).future
+
+    def search(self, request, timeout: float | None = None,
+               deadline_ms: float | None = None):
+        """Blocking convenience wrapper: submit + wait.
+
+        On ``timeout`` the request is marked **abandoned** — the
+        dispatcher skips it during coalescing instead of spending
+        encode/score on a result nobody will read — its Future resolves
+        with :class:`ServeTimeoutError`, and the same error is raised
+        here.
+        """
+        req = self._submit(request, deadline_ms)
+        try:
+            return req.future.result(timeout)
+        except _FutureTimeout:
+            req.abandoned = True
+            with self._lock:
+                self.stats["abandoned"] += 1
+            exc = ServeTimeoutError(
+                f"request not served within {timeout}s; abandoned "
+                f"(coalescing will skip it)")
+            try:
+                # resolve the Future so no accepted request is ever left
+                # unresolved; a dispatch racing us wins harmlessly
+                req.future.set_exception(exc)
+            except Exception:
+                pass
+            raise exc from None
 
     # -- dispatcher -----------------------------------------------------------
+    def _expire(self, req: _Request) -> None:
+        """Resolve a deadline-expired queued request with a degraded
+        empty result — the no-time-left analogue of a partial search;
+        the accepted-never-dropped invariant holds."""
+        ids = np.full((req.n, self.topk), -1, np.int64)
+        scores = np.full((req.n, self.topk), -np.inf, np.float32)
+        cov = np.zeros(req.n, np.float32)
+        try:
+            req.future.set_result(SearchOutcome((ids, scores),
+                                                coverage=cov,
+                                                degraded=True))
+        except Exception:                  # cancelled by the caller
+            pass
+        with self._lock:
+            self.stats["expired"] += 1
+
+    def _admissible(self, req: _Request) -> bool:
+        """Should this queued request still be scored?  Abandoned ones
+        are skipped (their Future is already resolved); deadline-expired
+        ones resolve degraded-empty here."""
+        if req.abandoned:
+            return False
+        if req.deadline is not None and time.monotonic() > req.deadline:
+            self._expire(req)
+            return False
+        return True
+
     def _collect(self) -> tuple[list[_Request], str | None, bool]:
         """Block for the next micro-batch.  Returns ``(batch, flush
         reason, stop)``; an empty batch with ``stop`` means shutdown."""
-        if self._carry is not None:
-            first, self._carry = self._carry, None
-        else:
-            first = self._queue.get()
-            if first is _SENTINEL:
-                return [], None, True
+        while True:
+            if self._carry is not None:
+                first, self._carry = self._carry, None
+            else:
+                first = self._queue.get()
+                if first is _SENTINEL:
+                    return [], None, True
+            if self._admissible(first):
+                break
         batch, n = [first], first.n
         deadline = time.monotonic() + self.max_wait_s
         reason = "full"
@@ -314,6 +426,8 @@ class ServeFrontend:
                 break
             if nxt is _SENTINEL:
                 return batch, "drain", True
+            if not self._admissible(nxt):
+                continue
             if n + nxt.n > self.max_batch:
                 self._carry = nxt          # keeps arrival order intact
                 break
@@ -329,7 +443,8 @@ class ServeFrontend:
             if stop:
                 if self._carry is not None:
                     carry, self._carry = self._carry, None
-                    self._dispatch([carry], "drain")
+                    if self._admissible(carry):
+                        self._dispatch([carry], "drain")
                 return
 
     def _dispatch(self, batch: list[_Request], reason: str) -> None:
@@ -351,43 +466,66 @@ class ServeFrontend:
             self.stats[f"flush_{reason}"] += 1
             self.stats["max_batch_seen"] = max(
                 self.stats["max_batch_seen"], n_real)
+        # the batch's recovery budget is the tightest member deadline:
+        # a resilient backend stops shard recovery there and returns the
+        # partial merge instead of blowing every member's latency bound
+        deadline_s = None
+        if self._backend_deadline:
+            now = time.monotonic()
+            remaining = [req.remaining_s(now) for req in batch
+                         if req.deadline is not None]
+            if remaining:
+                deadline_s = max(min(remaining), 1e-3)
+        kwargs = ({"deadline_s": deadline_s}
+                  if self._backend_deadline and deadline_s is not None
+                  else {})
         begin = getattr(self.backend, "begin", None)
         try:
             if begin is not None:
                 # pipelined: scoring ran inline; merge/demux complete on
                 # the backend's reduce thread while we collect the next
                 # micro-batch
-                fut = begin(texts, self.topk)
+                fut = begin(texts, self.topk, **kwargs)
                 fut.add_done_callback(
                     lambda f, b=batch: self._demux(b, f))
             else:
                 run = getattr(self.backend, "run", self.backend)
-                ids, scores = run(texts, self.topk)
-                self._finish(batch, ids, scores)
+                out = run(texts, self.topk, **kwargs)
+                self._finish(batch, out)
         except BaseException as exc:       # noqa: BLE001 — routed to futures
             self._fail(batch, exc)
 
     def _demux(self, batch: list[_Request], fut: Future) -> None:
         try:
-            ids, scores = fut.result()
+            out = fut.result()
         except BaseException as exc:       # noqa: BLE001 — routed to futures
             self._fail(batch, exc)
             return
-        self._finish(batch, ids, scores)
+        self._finish(batch, out)
 
-    def _finish(self, batch: list[_Request], ids, scores) -> None:
+    def _finish(self, batch: list[_Request], out) -> None:
+        ids, scores = out
+        coverage = getattr(out, "coverage", None)
         ids = np.asarray(ids)
         scores = np.asarray(scores)
         off = 0
+        n_degraded = 0
         for req in batch:
+            rows = (ids[off: off + req.n], scores[off: off + req.n])
+            if coverage is not None:
+                cov = np.asarray(coverage)[off: off + req.n]
+                degraded = bool((cov < 1.0).any())
+                rows = SearchOutcome(rows, coverage=cov,
+                                     degraded=degraded)
+                n_degraded += degraded
             try:
-                req.future.set_result((ids[off: off + req.n],
-                                       scores[off: off + req.n]))
+                req.future.set_result(rows)
             except Exception:              # cancelled by the caller
                 pass
             off += req.n
         with self._lock:
             self.stats["completed"] += len(batch)
+            self.stats["degraded"] += n_degraded
 
     def _fail(self, batch: list[_Request], exc: BaseException) -> None:
         for req in batch:

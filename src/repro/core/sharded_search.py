@@ -38,6 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.fair_sharding import FairSharder
+from repro.core.faults import (FaultInjector, InjectedTransportDrop,
+                               SearchOutcome)
 from repro.core.result_heap import FastResultHeapq
 
 # -- score backends -----------------------------------------------------------
@@ -262,6 +264,15 @@ class ShardedSearchDriver:
         per-chunk merge sequence on device.
     superchunk_max_mb : cap on the stacked (S, C, d) tile so autotuned
         or configured S can't blow device memory.
+    fault_injector : optional :class:`repro.core.faults.FaultInjector`
+        consulted at the chunk-load and gather fault points (chaos
+        tests, ``serve --chaos``).  ``None`` = no injection.
+    round_deadline_s / max_shard_retries / retry_backoff_s : recovery
+        knobs forwarded to a resilient gather (one exposing
+        ``merge_resilient``): how long a round waits for a silent
+        worker before reassigning its shard, how many rescore attempts
+        an orphaned shard gets, and the exponential-backoff base
+        between attempts.  Ignored by barrier-style transports.
     """
 
     def __init__(self, *, n_workers: int = 1, worker_index: int = 0,
@@ -269,7 +280,11 @@ class ShardedSearchDriver:
                  score_impl: str = "jax", heap_impl: str = "jax",
                  chunk_size: int = 32, prefetch: bool = True,
                  gather: ShardGather | None = None,
-                 superchunk_size: int = 0, superchunk_max_mb: int = 64):
+                 superchunk_size: int = 0, superchunk_max_mb: int = 64,
+                 fault_injector: FaultInjector | None = None,
+                 round_deadline_s: float = 30.0,
+                 max_shard_retries: int = 2,
+                 retry_backoff_s: float = 0.05):
         if not 0 <= worker_index < n_workers:
             raise ValueError(
                 f"worker_index {worker_index} outside [0, {n_workers})")
@@ -287,8 +302,15 @@ class ShardedSearchDriver:
         self.gather = gather
         self.superchunk_size = superchunk_size
         self.superchunk_max_mb = superchunk_max_mb
+        self.fault_injector = fault_injector
+        self.round_deadline_s = round_deadline_s
+        self.max_shard_retries = max_shard_retries
+        self.retry_backoff_s = retry_backoff_s
         # per-round observability (bench_multinode, serve logging)
         self.stats: dict = {}
+        # round counter for the single-worker path (W>1 uses the
+        # sharder-global round from FairSharder.acquire)
+        self._local_round = 0
         # lazy single-thread executor for search_async reduces; one
         # thread serializes merges in submission order (determinism)
         self._reduce_pool: ThreadPoolExecutor | None = None
@@ -369,9 +391,32 @@ class ShardedSearchDriver:
         cap = max(1, (self.superchunk_max_mb << 20) // tile_bytes)
         return max(1, min(s, cap))
 
-    def _search_superchunk(self, q_emb, heap: FastResultHeapq, lo: int,
-                           hi: int, load_chunk: ChunkLoader, topk: int,
-                           s: int) -> int:
+    def _chunk_iter(self, lo: int, hi: int, load_chunk: ChunkLoader,
+                    round_no: int, phase: str):
+        """The streamed chunk iterator, with the chunk-level fault point
+        (injected crashes / stalls) applied before each chunk is
+        scored."""
+        chunks = self._pipelined_chunks(lo, hi, load_chunk)
+        if self.fault_injector is None:
+            return chunks
+
+        def faulty():
+            try:
+                for ci, (off, embs) in enumerate(chunks):
+                    self.fault_injector.on_chunk(self.worker_index,
+                                                 round_no, ci, phase)
+                    yield off, embs
+            finally:
+                # an injected crash abandons the iteration mid-slice;
+                # close the pipeline generator NOW so its prefetch
+                # executor shuts down instead of lingering until GC
+                close = getattr(chunks, "close", None)
+                if close is not None:
+                    close()
+        return faulty()
+
+    def _search_superchunk(self, q_emb, heap: FastResultHeapq, chunks,
+                           topk: int, s: int) -> int:
         """Stream the slice through one-dispatch-per-superchunk scans.
 
         Accumulates S loaded chunks (prefetch thread unchanged), stacks
@@ -422,7 +467,7 @@ class ShardedSearchDriver:
             dispatches += 1
 
         buf: list = []
-        for off, embs in self._pipelined_chunks(lo, hi, load_chunk):
+        for off, embs in chunks:
             buf.append((off, embs))
             if len(buf) == s:
                 flush(buf)
@@ -432,16 +477,60 @@ class ShardedSearchDriver:
         heap.adopt_state(state_v[:n_q], state_i[:n_q])
         return dispatches
 
+    def _score_range(self, q_emb, lo: int, hi: int,
+                     load_chunk: ChunkLoader, topk: int, round_no: int,
+                     phase: str = "load"):
+        """Score one ``[lo, hi)`` corpus range into a fresh heap.
+
+        The single scoring implementation for both the worker's own
+        shard (``phase='load'``) and a survivor rescoring an orphaned
+        sibling shard (``phase='retry'``) — same chunking, same
+        executor, same kernels, so a recovered shard's state is bitwise
+        what the dead owner would have produced.  Returns ``(heap,
+        dispatches, executor, superchunk_size)``.
+        """
+        n_queries = q_emb.shape[0]
+        heap = FastResultHeapq(n_queries, topk, impl=self.heap_impl)
+        scan_ok = (self.score_impl in ("jax", "pallas_fused")
+                   and self.heap_impl in ("jax", "pallas") and hi > lo)
+        s = (self._resolve_superchunk_size(n_queries, q_emb.shape[1], topk)
+             if scan_ok else 1)
+        chunks = self._chunk_iter(lo, hi, load_chunk, round_no, phase)
+        if scan_ok and s > 1:
+            executor = "superchunk"
+            dispatches = self._search_superchunk(q_emb, heap, chunks,
+                                                 topk, s)
+        else:
+            executor = "per_chunk"
+            backend = get_score_backend(self.score_impl)
+            dispatches = 0
+            for off, embs in chunks:
+                backend(q_emb, embs, off, heap, topk)
+                dispatches += 1
+        return heap, dispatches, executor, s
+
+    def _rescore_shard(self, q_emb, lo: int, hi: int,
+                       load_chunk: ChunkLoader, topk: int,
+                       round_no: int):
+        """Recovery callback for the resilient gather: re-run the
+        scoring phase over an orphaned sibling shard and return its
+        finalized ``(vals, ids)`` state."""
+        heap, _, _, _ = self._score_range(q_emb, lo, hi, load_chunk,
+                                          topk, round_no, phase="retry")
+        return heap.finalize()
+
     def _score_local(self, q_emb, n_docs, load_chunk: ChunkLoader,
-                     topk: int) -> FastResultHeapq:
+                     topk: int, deadline_s: float | None = None):
         """The scoring phase of one round: stream this worker's shard
         slice into a **fresh** local (Q, k) heap and report the round's
         throughput observation.  Every call builds its own
         ``FastResultHeapq`` — donated device buffers are never shared
         between rounds, so a previous round's state may still be merging
-        (``search_async``) while this round scores."""
+        (``search_async``) while this round scores.  Returns ``(heap,
+        round_ctx)`` — the context the reduce phase needs for resilient
+        merging (round number, the round's full bounds, and a rescore
+        callback for orphaned sibling shards)."""
         n_queries = q_emb.shape[0]
-        heap = FastResultHeapq(n_queries, topk, impl=self.heap_impl)
         boundaries = getattr(n_docs, "partition_boundaries", None)
         if not isinstance(n_docs, (int, np.integer)):
             n_docs = len(n_docs)
@@ -449,29 +538,21 @@ class ShardedSearchDriver:
             # round-versioned partition: with async reduces, workers'
             # scoring phases are no longer barrier-ordered, so a plain
             # bounds() read could straddle an EMA commit and split the
-            # corpus differently on different ranks within one round
-            bounds = self.sharder.acquire_bounds(self.worker_index,
-                                                 int(n_docs), boundaries)
+            # corpus differently on different ranks within one round.
+            # The sharder-global round number also keys the resilient
+            # gather and the round-tagged EMA report — stable even when
+            # the caller builds a fresh driver per round (serve).
+            round_no, bounds = self.sharder.acquire(
+                self.worker_index, int(n_docs), boundaries)
         else:
+            round_no = self._local_round
+            self._local_round += 1
             bounds = self.sharder.bounds(int(n_docs), boundaries)
         lo, hi = bounds[self.worker_index]
         n_chunks = -(-max(hi - lo, 0) // self.chunk_size)
-        scan_ok = (self.score_impl in ("jax", "pallas_fused")
-                   and self.heap_impl in ("jax", "pallas") and hi > lo)
-        s = (self._resolve_superchunk_size(n_queries, q_emb.shape[1], topk)
-             if scan_ok else 1)
         t0 = time.monotonic()
-        if scan_ok and s > 1:
-            executor = "superchunk"
-            dispatches = self._search_superchunk(
-                q_emb, heap, lo, hi, load_chunk, topk, s)
-        else:
-            executor = "per_chunk"
-            backend = get_score_backend(self.score_impl)
-            dispatches = 0
-            for off, embs in self._pipelined_chunks(lo, hi, load_chunk):
-                backend(q_emb, embs, off, heap, topk)
-                dispatches += 1
+        heap, dispatches, executor, s = self._score_range(
+            q_emb, lo, hi, load_chunk, topk, round_no)
         seconds = time.monotonic() - t0
         # Report the round.  A shared sharder (SimulatedCluster) hears
         # every worker directly; with per-process sharder replicas (real
@@ -482,21 +563,60 @@ class ShardedSearchDriver:
         if self.n_workers > 1 and exchange is not None:
             reports = exchange(self.worker_index, hi - lo, seconds)
         for rank, items, secs in reports:
-            self.sharder.update(rank, items, secs)
+            self.sharder.update(rank, items, secs, round_no=round_no)
         self.stats = {"lo": lo, "hi": hi, "items": hi - lo,
                       "chunks": n_chunks, "seconds": seconds,
                       "executor": executor, "superchunk_size": s,
-                      "dispatch_rounds": dispatches}
-        return heap
+                      "dispatch_rounds": dispatches, "round": round_no}
+        ctx = {
+            "round_no": round_no,
+            "bounds": bounds,
+            "deadline_s": deadline_s,
+            "rescore": lambda rlo, rhi: self._rescore_shard(
+                q_emb, rlo, rhi, load_chunk, topk, round_no),
+        }
+        return heap, ctx
 
-    def _reduce(self, heap: FastResultHeapq):
-        """The reduce phase: cross-worker gather/merge + host finalize."""
+    def _reduce(self, heap: FastResultHeapq, ctx: dict | None = None):
+        """The reduce phase: cross-worker gather/merge + host finalize.
+
+        With a resilient gather (one exposing ``merge_resilient``) the
+        merge recovers orphaned sibling shards and the result is a
+        :class:`~repro.core.faults.SearchOutcome` carrying per-query
+        coverage; barrier transports return the plain finalized tuple.
+        """
         if self.n_workers > 1 and self.gather is not None:
+            round_no = ctx["round_no"] if ctx is not None else None
+            resilient = getattr(self.gather, "merge_resilient", None)
+            if resilient is not None and ctx is not None:
+                dropped = False
+                if self.fault_injector is not None:
+                    try:
+                        self.fault_injector.on_gather(self.worker_index,
+                                                      round_no)
+                    except InjectedTransportDrop:
+                        # this worker's state is lost in flight; it
+                        # stays alive and joins the recovery instead
+                        dropped = True
+                vals, ids, coverage = resilient(
+                    heap, self.worker_index, round_no, ctx["bounds"],
+                    ctx["rescore"], dropped=dropped,
+                    round_deadline_s=self.round_deadline_s,
+                    max_retries=self.max_shard_retries,
+                    backoff_s=self.retry_backoff_s,
+                    deadline_s=ctx["deadline_s"])
+                return SearchOutcome(
+                    (vals, ids), coverage=coverage,
+                    degraded=bool((coverage < 1.0).any()))
+            if self.fault_injector is not None and round_no is not None:
+                # a drop against a barrier transport propagates: the
+                # legacy abort-the-round behavior
+                self.fault_injector.on_gather(self.worker_index, round_no)
             heap = self.gather.merge(heap, self.worker_index)
         return heap.finalize()
 
     def search(self, q_emb, n_docs, load_chunk: ChunkLoader,
-               topk: int):
+               topk: int, deadline_s: float | None = None):
         """Run this worker's encode→score→local-top-k round, then reduce.
 
         ``n_docs`` may be an int or a sized corpus object (e.g. a lazy
@@ -504,12 +624,19 @@ class ShardedSearchDriver:
         Returns the merged ``(scores (Q, k), positions (Q, k))`` —
         identical on every worker when a gather transport is set.
         Positions are global corpus offsets; ``-1`` marks empty slots.
+
+        ``deadline_s`` (resilient gather only) bounds how long the
+        reduce phase may spend recovering orphaned shards; past it the
+        round resolves partial — a ``SearchOutcome`` with ``degraded``
+        set and per-query ``coverage`` < 1 — instead of raising.
         """
-        return self._reduce(self._score_local(q_emb, n_docs, load_chunk,
-                                              topk))
+        heap, ctx = self._score_local(q_emb, n_docs, load_chunk, topk,
+                                      deadline_s)
+        return self._reduce(heap, ctx)
 
     def search_async(self, q_emb, n_docs, load_chunk: ChunkLoader,
-                     topk: int) -> Future:
+                     topk: int, deadline_s: float | None = None
+                     ) -> Future:
         """Like :meth:`search`, but the reduce phase (shard gather/merge
         + host finalize) runs on a driver-owned background thread and the
         merged ``(scores, positions)`` come back as a Future.
@@ -524,11 +651,12 @@ class ShardedSearchDriver:
         results — and the gather transport's rank-order merge — are
         bitwise identical to the synchronous path.
         """
-        heap = self._score_local(q_emb, n_docs, load_chunk, topk)
+        heap, ctx = self._score_local(q_emb, n_docs, load_chunk, topk,
+                                      deadline_s)
         if self._reduce_pool is None:
             self._reduce_pool = ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="shard-reduce")
-        return self._reduce_pool.submit(self._reduce, heap)
+        return self._reduce_pool.submit(self._reduce, heap, ctx)
 
     def close(self) -> None:
         """Drain and shut down the async-reduce thread (no-op when

@@ -90,34 +90,85 @@ class SimulatedCluster:
     ``run(worker_fn)`` executes ``worker_fn(rank)`` on W threads and
     returns all ranks' results.  Because :class:`InMemoryAllGather`
     merges in rank order, all results are identical.
+
+    ``resilient=True`` swaps the barrier gather for a
+    :class:`~repro.core.faults.ResilientAllGather` wired to a shared
+    :class:`~repro.core.faults.WorkerHealth` board: a worker raising
+    (e.g. an injected crash) no longer aborts its siblings — the
+    cluster marks it dead (health board + sharder + gather wake-up),
+    survivors recover its shard inside the round, and subsequent
+    ``run`` calls skip the dead rank entirely.  Each live worker runs
+    under a heartbeat (the training stack's
+    ``fault_tolerance.Heartbeat``) feeding the health board, so
+    staleness-based failure detection sees real liveness signals.
+    ``run`` then returns the **first live rank's** result (all live
+    ranks are identical) in every slot that died, so callers indexing
+    ``outs[rank]`` keep working.
     """
 
-    def __init__(self, world_size: int):
+    def __init__(self, world_size: int, resilient: bool = False,
+                 stale_after_s: float | None = None):
         self.world_size = world_size
-        self.gather = InMemoryAllGather(world_size)
+        self.resilient = resilient
         self.sharder = FairSharder(world_size)
+        if resilient:
+            from repro.core.faults import ResilientAllGather, WorkerHealth
+            self.health = WorkerHealth(world_size,
+                                       stale_after_s=stale_after_s)
+            self.gather = ResilientAllGather(world_size,
+                                             health=self.health,
+                                             sharder=self.sharder)
+        else:
+            self.health = None
+            self.gather = InMemoryAllGather(world_size)
 
     def run(self, worker_fn: Callable[[int], object]) -> list:
         results: list = [None] * self.world_size
         errors: list = [None] * self.world_size
+        dead_before = (set() if self.health is None else self.health.dead)
 
         def target(rank: int) -> None:
             try:
-                results[rank] = worker_fn(rank)
+                if self.health is not None:
+                    with self.health.heartbeat(rank):
+                        results[rank] = worker_fn(rank)
+                else:
+                    results[rank] = worker_fn(rank)
             except BaseException as exc:     # noqa: BLE001 — re-raised below
                 errors[rank] = exc
-                self.gather.abort()
-                # siblings may equally be blocked waiting for this
-                # rank's round report (pipelined acquire_bounds)
-                self.sharder.abort(exc)
+                if self.resilient:
+                    # degrade, don't collapse: mark the rank dead so the
+                    # sharder stops waiting for its reports and the
+                    # gather reassigns its in-flight shard to survivors
+                    self.sharder.mark_dead(rank)
+                    self.gather.notify_death(rank)
+                else:
+                    self.gather.abort()
+                    # siblings may equally be blocked waiting for this
+                    # rank's round report (pipelined acquire_bounds)
+                    self.sharder.abort(exc)
 
         threads = [threading.Thread(target=target, args=(rank,),
                                     name=f"sim-worker-{rank}")
-                   for rank in range(self.world_size)]
+                   for rank in range(self.world_size)
+                   if rank not in dead_before]
         for t in threads:
             t.start()
         for t in threads:
             t.join()
+        if self.resilient:
+            live = [rank for rank in range(self.world_size)
+                    if rank not in dead_before and errors[rank] is None]
+            if not live:
+                for exc in errors:
+                    if exc is not None:
+                        raise exc
+                raise ShardAborted(
+                    f"no live worker left of {self.world_size}")
+            for rank in range(self.world_size):
+                if rank in dead_before or errors[rank] is not None:
+                    results[rank] = results[live[0]]
+            return results
         for exc in errors:
             if exc is not None and not isinstance(
                     exc, (threading.BrokenBarrierError, ShardAborted)):

@@ -82,7 +82,25 @@ def main(argv=None):
                     help="micro-batch flush deadline after first request")
     ap.add_argument("--max-queue", type=int, default=256,
                     help="admission-control bound on pending requests")
+    ap.add_argument("--resilient", action="store_true",
+                    help="fault-tolerant cluster (workers > 1): a dead "
+                         "or silent worker's shard is reassigned to "
+                         "survivors instead of aborting the round")
+    ap.add_argument("--chaos", default=None,
+                    choices=("crash", "stall", "drop"),
+                    help="inject one fault of this kind into worker 1 "
+                         "at the first steady-state round (requires "
+                         "--resilient and --workers > 1)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request latency bound: queued past it -> "
+                         "degraded empty result; dispatched -> bounds "
+                         "shard-recovery time")
+    ap.add_argument("--round-deadline-s", type=float, default=5.0,
+                    help="how long a round waits for a silent worker "
+                         "before reassigning its shard (resilient only)")
     args = ap.parse_args(argv)
+    if args.chaos and not (args.resilient and args.workers > 1):
+        ap.error("--chaos requires --resilient and --workers > 1")
 
     arch = get_arch(args.arch)
     if args.smoke:
@@ -120,9 +138,27 @@ def main(argv=None):
                                     ivf_nprobe=args.nprobe,
                                     serve_max_batch=args.max_batch,
                                     serve_max_wait_ms=args.max_wait_ms,
-                                    serve_max_queue=args.max_queue)
+                                    serve_max_queue=args.max_queue,
+                                    round_deadline_s=args.round_deadline_s)
     cache = EmbeddingCache(os.path.join(args.data_dir, "emb_cache"),
                            dim=arch.cfg.d_model)
+
+    # one micro-batch = one sharded round; the warm pass below issues
+    # exactly len(warm_widths) micro-batches, so the first steady-state
+    # round number is known ahead of time — that's where chaos strikes
+    n_warm_rounds = 0
+    b = 1
+    while b < args.max_batch:
+        n_warm_rounds += 1
+        b *= 2
+    n_warm_rounds += 1
+    injector = None
+    if args.chaos:
+        from repro.core.faults import Fault, FaultInjector
+        injector = FaultInjector([Fault(
+            kind=args.chaos, worker=1, round=n_warm_rounds,
+            phase="gather" if args.chaos == "drop" else "load",
+            stall_s=2 * args.round_deadline_s)])
 
     # -- frontend construction (the expensive pass: corpus encode/cache
     # warm-up + driver setup happen here, once) ------------------------------
@@ -131,16 +167,18 @@ def main(argv=None):
         # W real driver instances in this process, deterministic
         # in-memory all-gather — the same code path as W real nodes
         from repro.launch.distributed import SimulatedCluster
-        cluster = SimulatedCluster(args.workers)
+        cluster = SimulatedCluster(args.workers, resilient=args.resilient)
         evs = [RetrievalEvaluator(eval_args, retriever, collator, params,
                                   process_index=rank,
                                   process_count=args.workers,
                                   gather=cluster.gather,
-                                  sharder=cluster.sharder)
+                                  sharder=cluster.sharder,
+                                  fault_injector=injector)
                for rank in range(args.workers)]
         frontend = ServeFrontend.from_cluster(
             evs, cluster, corpus, [cache] * args.workers)
-        label = f"{args.workers} simulated workers"
+        label = (f"{args.workers} simulated workers"
+                 + (" (resilient)" if args.resilient else ""))
     elif args.workers == 1:
         # forced single-worker baseline, even under jax.distributed
         ev = RetrievalEvaluator(eval_args, retriever, collator, params,
@@ -191,7 +229,8 @@ def main(argv=None):
         t0 = time.monotonic()
         while True:
             try:
-                fut = frontend.submit(requests[i])
+                fut = frontend.submit(requests[i],
+                                      deadline_ms=args.deadline_ms)
                 break
             except ServeOverloadError:
                 time.sleep(0.001)      # accepted-or-retried, never dropped
@@ -222,6 +261,17 @@ def main(argv=None):
     print(f"steady state: p50 {p50:.1f} ms  p99 {p99:.1f} ms  "
           f"{qps:.1f} queries/s  ({fs['batches']} micro-batches, "
           f"largest {fs['max_batch_seen']} queries)")
+    if args.chaos:
+        # no-lost-request evidence: the fault really fired, and every
+        # accepted request still resolved (submit_one asserts shape, so
+        # reaching here means all futures completed)
+        assert injector.fired, "chaos fault never fired"
+        fault_str = ", ".join(f"{k}@r{r}" for k, r, *_ in
+                              ((f.kind, f.round) for f in injector.faults))
+        print(f"chaos: injected [{fault_str}] -> {len(injector.fired)} "
+              f"fired, {args.n_requests}/{args.n_requests} requests "
+              f"resolved, {fs['degraded']} degraded, "
+              f"{fs['expired']} expired")
     print("serving done")
     return {"label": label, "warm_s": warm_s, "prep_s": prep_s,
             "latencies_ms": [float(x) * 1e3 for x in latencies],

@@ -20,9 +20,22 @@ from typing import Callable
 
 
 class Heartbeat:
-    def __init__(self, path: str, interval: float = 10.0):
+    """Periodic liveness signal from a background thread.
+
+    The default sink writes a heartbeat *file* (atomic tmp+replace) for
+    an external watchdog.  ``sink`` swaps that for any callable taking
+    the payload dict — the serving stack's
+    :class:`repro.core.faults.WorkerHealth` wires its per-worker beat in
+    here, so training and serving share one heartbeat implementation.
+    """
+
+    def __init__(self, path: str | None = None, interval: float = 10.0,
+                 sink: Callable[[dict], None] | None = None):
+        if path is None and sink is None:
+            raise ValueError("Heartbeat needs a path or a sink")
         self.path = path
         self.interval = interval
+        self.sink = sink if sink is not None else self._write_file
         self._stop = threading.Event()
         self._step = 0
         self._thread: threading.Thread | None = None
@@ -32,18 +45,22 @@ class Heartbeat:
 
     def _run(self):
         while not self._stop.wait(self.interval):
-            self._write()
+            self._emit()
 
-    def _write(self):
+    def _emit(self):
+        self.sink({"step": self._step, "time": time.time(),
+                   "pid": os.getpid()})
+
+    def _write_file(self, payload: dict):
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump({"step": self._step, "time": time.time(),
-                       "pid": os.getpid()}, f)
+            json.dump(payload, f)
         os.replace(tmp, self.path)
 
     def __enter__(self):
-        self._write()
-        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._emit()
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="heartbeat")
         self._thread.start()
         return self
 
@@ -51,7 +68,7 @@ class Heartbeat:
         self._stop.set()
         if self._thread:
             self._thread.join(timeout=1.0)
-        self._write()
+        self._emit()
         return False
 
 

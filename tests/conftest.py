@@ -46,3 +46,34 @@ def retrieval_data(tmp_path_factory):
 @pytest.fixture()
 def rng():
     return np.random.default_rng(0)
+
+
+# the search/serve stack's worker threads all carry these name prefixes;
+# anything still alive after a test leaked out of a driver/frontend/
+# cluster that should have been drained on exit
+_STACK_THREAD_PREFIXES = ("serve-dispatch", "shard-reduce",
+                          "chunk-prefetch", "sim-worker", "heartbeat")
+
+
+@pytest.fixture(autouse=True)
+def no_stack_thread_leaks():
+    """Every test must leave the stack's thread pool empty: stray
+    dispatcher / reduce / prefetch / worker / heartbeat threads from one
+    test would serialize behind (or deadlock with) the next test's
+    cluster."""
+    import threading
+    import time
+
+    before = set(threading.enumerate())
+    yield
+    deadline = time.monotonic() + 2.0
+    while True:
+        leaked = [t for t in threading.enumerate()
+                  if t not in before and t.is_alive()
+                  and t.name.startswith(_STACK_THREAD_PREFIXES)]
+        if not leaked or time.monotonic() > deadline:
+            break
+        time.sleep(0.02)
+    assert not leaked, (
+        f"stack threads leaked past the test: "
+        f"{[t.name for t in leaked]}")
