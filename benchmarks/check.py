@@ -135,6 +135,28 @@ def _run_faults(out_json):
     return bench_faults.run(out_json=out_json)
 
 
+def _mutation_metrics(payload):
+    return {
+        # structural snapshot-isolation guarantees: exact
+        "mutation_oracle_bitwise": payload["headline"]["oracle_bitwise"],
+        "mutation_resolved_fraction":
+            payload["headline"]["resolved_fraction"],
+        # timing: tolerance-gated
+        "mutation_live_qps_ratio": payload["headline"]["live_qps_ratio"],
+        "mutation_live_p99_headroom":
+            payload["headline"]["live_p99_headroom"],
+        "mutation_compaction_pause_ratio":
+            payload["headline"]["compaction_pause_ratio"],
+        "mutation_compact_scan_speedup":
+            payload["headline"]["compact_scan_speedup"],
+    }
+
+
+def _run_mutation(out_json):
+    from benchmarks import bench_mutation
+    return bench_mutation.run(out_json=out_json)
+
+
 # baseline file -> (fresh-run fn, metric extractor).  Metrics are all
 # higher-is-better ratios.
 CHECKS = {
@@ -145,6 +167,7 @@ CHECKS = {
     "bench_serve.json": (_run_serve, _serve_metrics),
     "bench_ivf.json": (_run_ivf, _ivf_metrics),
     "bench_faults.json": (_run_faults, _faults_metrics),
+    "bench_mutation.json": (_run_mutation, _mutation_metrics),
 }
 
 # Structural metrics are deterministic functions of the code (dispatch /
@@ -153,7 +176,8 @@ CHECKS = {
 EXACT_METRICS = {"dispatch_reduction", "compile_reduction",
                  "serve_completed_fraction", "ivf_full_probe_bitwise",
                  "ivf_n_clusters", "fault_recovery_bitwise",
-                 "fault_recovery_coverage", "fault_all_rounds_bitwise"}
+                 "fault_recovery_coverage", "fault_all_rounds_bitwise",
+                 "mutation_oracle_bitwise", "mutation_resolved_fraction"}
 
 
 def main(argv=None) -> int:

@@ -15,6 +15,9 @@ Prints ``name,us_per_call,derived`` CSV rows (see DESIGN.md §7 index):
            QPS/p50/p99 curve over submitter concurrency (+ results/*.json)
   ivf      flat exhaustive scan vs IVF cluster-pruned search: recall@10
            vs speedup over the nprobe sweep (+ results/*.json)
+  mutation serve QPS/p99 under sustained live corpus mutation vs a
+           frozen corpus, compaction pause, post-compaction scan
+           speedup (+ results/*.json)
 
 ``run.py --check [--tol T]`` re-runs the JSON-emitting benches into a
 scratch dir and compares their key metrics against the committed
@@ -32,9 +35,10 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (bench_dispatch, bench_encode, bench_faults,
                             bench_ivf, bench_kernels, bench_memory,
-                            bench_multinode, bench_result_heap,
-                            bench_scaling, bench_search_backends,
-                            bench_serve, bench_ttfs)
+                            bench_multinode, bench_mutation,
+                            bench_result_heap, bench_scaling,
+                            bench_search_backends, bench_serve,
+                            bench_ttfs)
     bench_result_heap.run()
     bench_scaling.run()
     bench_ttfs.run()
@@ -47,6 +51,7 @@ def main() -> None:
     bench_serve.run()
     bench_ivf.run()
     bench_faults.run()
+    bench_mutation.run()
 
 
 if __name__ == "__main__":

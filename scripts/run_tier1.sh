@@ -34,6 +34,14 @@ python -m repro.launch.serve --smoke --data-dir "$CHAOS_TMP/data" \
   --max-batch 8 --max-wait-ms 2 --round-deadline-s 1
 rm -rf "$CHAOS_TMP"
 
+echo "== mutation smoke (live corpus: adds/re-caches/tombstones + compaction between micro-batches) =="
+MUT_TMP="$(mktemp -d)"
+python -m repro.launch.serve --smoke --mutate --data-dir "$MUT_TMP/data" \
+  --workers 2 --score-impl numpy \
+  --n-requests 4 --batch 3 --concurrency 2 \
+  --max-batch 8 --max-wait-ms 2
+rm -rf "$MUT_TMP"
+
 echo "== ivf smoke (cluster-pruned serving: build/persist index, serve with --nprobe) =="
 IVF_TMP="$(mktemp -d)"
 python -m repro.launch.serve --smoke --data-dir "$IVF_TMP/data" \

@@ -106,19 +106,35 @@ class PreparedCorpus:
     call: the corpus id hashes, the sized object the FairSharder
     partitions positionally, and the chunk loader (mmap plan / encode
     pipeline / device-resident slices) the driver streams.
+
+    A cache-backed preparation pins a :class:`CacheSnapshot`:
+    ``generation`` carries its ``(generation, epoch)`` key, searches
+    against this corpus are pinned to exactly that view (concurrent
+    mutations and compactions never show through), and with W > 1
+    workers the driver hands the key to the sharder so every worker of a
+    round provably scores the same snapshot.  :meth:`close` releases the
+    pin (so compaction may retire the old epoch's files); non-cache
+    corpora have ``generation is None`` and :meth:`close` is a no-op.
     """
 
-    __slots__ = ("hashes", "n_docs", "load_chunk", "sized")
+    __slots__ = ("hashes", "n_docs", "load_chunk", "sized", "generation",
+                 "snapshot")
 
     def __init__(self, hashes: np.ndarray, n_docs: int, load_chunk,
-                 sized=None):
+                 sized=None, generation=None, snapshot=None):
         self.hashes = hashes
         self.n_docs = n_docs
         self.load_chunk = load_chunk
         self.sized = n_docs if sized is None else sized
+        self.generation = generation
+        self.snapshot = snapshot
 
     def __len__(self) -> int:
         return self.n_docs
+
+    def close(self) -> None:
+        if self.snapshot is not None:
+            self.snapshot.close()
 
     def positions_to_ids(self, pos: np.ndarray) -> np.ndarray:
         """Map the driver's int32 global positions to 63-bit id hashes
@@ -170,8 +186,9 @@ class IVFPreparedCorpus(PreparedCorpus):
     __slots__ = ("index", "fetch_rows", "nprobe")
 
     def __init__(self, hashes: np.ndarray, n_docs: int, fetch_rows,
-                 index, nprobe: int):
-        super().__init__(hashes, n_docs, load_chunk=None)
+                 index, nprobe: int, generation=None, snapshot=None):
+        super().__init__(hashes, n_docs, load_chunk=None,
+                         generation=generation, snapshot=snapshot)
         self.index = index
         self.fetch_rows = fetch_rows
         self.nprobe = int(nprobe)
@@ -405,14 +422,21 @@ class RetrievalEvaluator:
                                   lambda lo, hi: arr[lo:hi])
 
         # cached-corpus plan: when the cache already covers the corpus,
-        # resolve the position->row mapping ONCE (or skip it entirely if
-        # the cache rows are the corpus order) instead of running a
-        # searchsorted per streamed chunk; chunk loads become plain
-        # contiguous mmap reads that the driver stacks and uploads once
-        # per superchunk.
-        plan = (cache.row_plan(all_hashes)
-                if cache is not None and len(cache)
-                and self.args.use_cached_embeddings else None)
+        # pin a snapshot and resolve the position->row mapping ONCE (or
+        # skip it entirely if the live rows are the corpus order)
+        # instead of running a searchsorted per streamed chunk; chunk
+        # loads become plain contiguous mmap reads that the driver
+        # stacks and uploads once per superchunk.  The snapshot pins the
+        # generation: concurrent mutations/compactions never show
+        # through this prepared corpus.
+        plan = snap = None
+        if (cache is not None and len(cache)
+                and self.args.use_cached_embeddings):
+            snap = cache.snapshot()
+            plan = snap.row_plan(all_hashes)
+            if plan is None:
+                snap.close()
+                snap = None
 
         if plan is None and cache is None and \
                 self.encode_pipeline is not None:
@@ -431,15 +455,17 @@ class RetrievalEvaluator:
                 if plan is not None:
                     kind, rows = plan
                     if kind == "range":
-                        return cache.get_range(lo, hi).astype(np.float32)
-                    return cache.get_rows(rows[lo:hi]).astype(np.float32)
+                        return snap.get_range(lo, hi).astype(np.float32)
+                    return snap.get_rows(rows[lo:hi]).astype(np.float32)
                 # cache keys are stable hashes, so the already-hashed id
                 # slice addresses it for raw-id dicts and views alike
                 return self.encode_corpus(
                     all_hashes[lo:hi], corpus_texts[lo:hi], cache,
                     device=on_device)
         return PreparedCorpus(all_hashes, n_docs, load_chunk,
-                              sized=corpus_v)
+                              sized=corpus_v,
+                              generation=snap.key if snap else None,
+                              snapshot=snap)
 
     def _prepare_ivf(self, corpus_v: DatasetView,
                      cache: EmbeddingCache | None, *,
@@ -456,7 +482,6 @@ class RetrievalEvaluator:
         retraining; any mismatch (corpus changed, knobs changed, torn
         save) silently rebuilds.
         """
-        import hashlib
         import os
 
         a = self.args
@@ -465,26 +490,30 @@ class RetrievalEvaluator:
         n_docs = len(corpus_v)
         k = int(min(a.ivf_nclusters, n_docs))
 
-        plan = (cache.row_plan(all_hashes)
-                if cache is not None and len(cache)
-                and a.use_cached_embeddings and not device_resident
-                else None)
+        plan = snap = None
+        if (cache is not None and len(cache)
+                and a.use_cached_embeddings and not device_resident):
+            snap = cache.snapshot()
+            plan = snap.row_plan(all_hashes)
+            if plan is None:
+                snap.close()
+                snap = None
         if plan is not None:
             kind, rows_map = plan
             dim = cache.dim
             if kind == "range":
                 def get_range(lo, hi):
-                    return cache.get_range(lo, hi).astype(np.float32)
+                    return snap.get_range(lo, hi).astype(np.float32)
 
                 def fetch_rows(rows):
-                    return cache.get_rows(rows).astype(np.float32)
+                    return snap.get_rows(rows).astype(np.float32)
             else:
                 def get_range(lo, hi):
-                    return cache.get_rows(rows_map[lo:hi]).astype(
+                    return snap.get_rows(rows_map[lo:hi]).astype(
                         np.float32)
 
                 def fetch_rows(rows):
-                    return cache.get_rows(rows_map[rows]).astype(
+                    return snap.get_rows(rows_map[rows]).astype(
                         np.float32)
         else:
             # encode now (warming the cache when given) and keep the
@@ -504,9 +533,15 @@ class RetrievalEvaluator:
             def fetch_rows(rows):
                 return arr[rows]
 
-        digest = (hashlib.sha1(all_hashes.tobytes()).hexdigest()[:16]
-                  + f"-s{a.ivf_seed}-t{a.ivf_train_steps}"
-                  + f"-b{a.ivf_train_batch}")
+        from repro.index.ivf import corpus_digest
+
+        # the cache generation is part of the digest: a mutated corpus
+        # invalidates the persisted permutation (rebuild) instead of
+        # silently loading a layout over a different row set
+        digest = corpus_digest(all_hashes, seed=a.ivf_seed,
+                               train_steps=a.ivf_train_steps,
+                               train_batch=a.ivf_train_batch,
+                               generation=snap.key if snap else None)
         index_dir = (os.path.join(cache.path, f"ivf_k{k}")
                      if cache is not None else None)
         index = None
@@ -523,7 +558,66 @@ class RetrievalEvaluator:
             if index_dir is not None:
                 index.save(index_dir, digest=digest)
         return IVFPreparedCorpus(all_hashes, n_docs, fetch_rows, index,
-                                 a.ivf_nprobe)
+                                 a.ivf_nprobe,
+                                 generation=snap.key if snap else None,
+                                 snapshot=snap)
+
+    def prepare_cache_corpus(self, cache: EmbeddingCache,
+                             generation=None) -> "PreparedCorpus":
+        """Prepare the cache's *own* live document set for search — the
+        live-serving entry point: the corpus is whatever is live in the
+        pinned snapshot (adds/updates/deletes included), not an external
+        id list.  ``generation`` accepts a ``(generation, epoch)`` key
+        (e.g. the agreed key from a :class:`GenerationMismatch`) to pin
+        a specific earlier view.  Chunk loads stream live rows straight
+        off the snapshot's mmap — preparation is O(live-set) index work,
+        no encoding — so swapping to a new generation between serve
+        micro-batches is cheap."""
+        snap = cache.snapshot(generation)
+        if self.args.index_impl == "ivf" and snap.n_live > 0:
+            return self._prepare_ivf_snapshot(cache, snap)
+
+        def load_chunk(lo: int, hi: int):
+            return snap.get_range(lo, hi).astype(np.float32)
+
+        return PreparedCorpus(snap.ids, snap.n_live, load_chunk,
+                              generation=snap.key, snapshot=snap)
+
+    def _prepare_ivf_snapshot(self, cache: EmbeddingCache,
+                              snap) -> "IVFPreparedCorpus":
+        """IVF preparation over a pinned snapshot's live rows (the
+        live-serving counterpart of :meth:`_prepare_ivf`)."""
+        import os
+
+        from repro.index import IVFIndex
+        from repro.index.ivf import corpus_digest
+
+        a = self.args
+        n_docs = snap.n_live
+        k = int(min(a.ivf_nclusters, n_docs))
+
+        def get_range(lo, hi):
+            return snap.get_range(lo, hi).astype(np.float32)
+
+        def fetch_rows(rows):
+            return snap.get_rows(rows).astype(np.float32)
+
+        digest = corpus_digest(snap.ids, seed=a.ivf_seed,
+                               train_steps=a.ivf_train_steps,
+                               train_batch=a.ivf_train_batch,
+                               generation=snap.key)
+        index_dir = os.path.join(cache.path, f"ivf_k{k}")
+        index = IVFIndex.load(index_dir, expect_n=n_docs,
+                              expect_dim=cache.dim, expect_clusters=k,
+                              expect_digest=digest)
+        if index is None:
+            index = IVFIndex.build(get_range, n_docs, k, seed=a.ivf_seed,
+                                   train_steps=a.ivf_train_steps,
+                                   train_batch=a.ivf_train_batch)
+            index.save(index_dir, digest=digest)
+        return IVFPreparedCorpus(snap.ids, n_docs, fetch_rows, index,
+                                 a.ivf_nprobe, generation=snap.key,
+                                 snapshot=snap)
 
     @staticmethod
     def _with_coverage(items, search_out):
@@ -548,7 +642,8 @@ class RetrievalEvaluator:
         driver = self.make_driver()
         sized, load_chunk, to_ids = prepared.round_for(q_emb)
         out = driver.search(q_emb, sized, load_chunk, topk,
-                            deadline_s=deadline_s)
+                            deadline_s=deadline_s,
+                            generation=prepared.generation)
         vals, pos = out
         return self._with_coverage(
             (np.asarray(q_view.id_hashes), to_ids(pos), vals), out)
@@ -569,7 +664,8 @@ class RetrievalEvaluator:
         driver = self.make_driver()
         sized, load_chunk, to_ids = prepared.round_for(q_emb)
         out = driver.search(q_emb, sized, load_chunk, topk,
-                            deadline_s=deadline_s)
+                            deadline_s=deadline_s,
+                            generation=prepared.generation)
         vals, pos = out
         return self._with_coverage((to_ids(pos), vals), out)
 

@@ -30,6 +30,23 @@ import time
 import numpy as np
 
 
+class GenerationMismatch(RuntimeError):
+    """Raised by :meth:`FairSharder.acquire` when this worker's pinned
+    corpus generation disagrees with the round's agreed generation (the
+    first acquirer's key wins).  The round is *not* consumed: the caller
+    re-prepares its corpus at :attr:`agreed` (e.g.
+    ``cache.snapshot(agreed)``) and re-acquires the same round."""
+
+    def __init__(self, round_no: int, agreed, mine):
+        super().__init__(
+            f"round {round_no}: this worker is pinned to generation "
+            f"{mine} but the round agreed on {agreed}; re-prepare at "
+            f"the agreed generation and re-acquire")
+        self.round_no = round_no
+        self.agreed = agreed
+        self.mine = mine
+
+
 class ShardAborted(RuntimeError):
     """A sibling worker died mid-round (or a round wait timed out); this
     worker's wait was released.  Secondary casualty — cluster runners
@@ -58,6 +75,8 @@ class FairSharder:
         self._cv = threading.Condition(self._lock)
         self._committed = 0                  # rounds folded into the EMA
         self._issued = [0] * n_workers       # rounds begun, per worker
+        # round -> agreed corpus generation key (first acquirer wins)
+        self._round_gen: dict[int, object] = {}
         self._abort_exc: BaseException | None = None
         self._dead: set[int] = set()
 
@@ -148,8 +167,8 @@ class FairSharder:
             parts.append(f"dead workers: {sorted(self._dead)}")
         return "; ".join(parts)
 
-    def acquire(self, worker: int, total_items: int,
-                boundaries=None) -> tuple[int, list[tuple[int, int]]]:
+    def acquire(self, worker: int, total_items: int, boundaries=None,
+                generation=None) -> tuple[int, list[tuple[int, int]]]:
         """Round-versioned partition: ``(round_no, bounds)``.
 
         A worker's r-th call blocks until rounds ``0..r-1`` have all
@@ -168,6 +187,15 @@ class FairSharder:
         partition belongs to — the key the fault-tolerant gather and
         round-tagged :meth:`update` use, and stable even when the caller
         constructs a fresh driver per round (the serve cluster backend).
+
+        ``generation`` (optional, any comparable key — the cache's
+        ``(generation, epoch)``) makes the round *generation-agreed*:
+        the first acquirer's key becomes the round's generation, and a
+        later acquirer pinned to a different one gets
+        :class:`GenerationMismatch` without consuming the round — it
+        re-prepares at the agreed key and re-acquires, so all W workers
+        of a round provably score the same corpus snapshot even while a
+        writer mutates the cache between rounds.
         """
         with self._cv:
             r = self._issued[worker]
@@ -186,6 +214,13 @@ class FairSharder:
                     f"sharder aborted while worker {worker} waited for "
                     f"round {r}: {self._round_diagnostics()}"
                 ) from self._abort_exc
+            if generation is not None:
+                agreed = self._round_gen.setdefault(r, generation)
+                if agreed != generation:
+                    # roll the issue back: the round was not consumed —
+                    # the caller re-acquires it at the agreed generation
+                    self._issued[worker] -= 1
+                    raise GenerationMismatch(r, agreed, generation)
         # safe outside the lock: round r cannot commit (and move the
         # EMA) until THIS worker reports it, which happens only after
         # the caller scores the slice these bounds describe
@@ -273,5 +308,6 @@ class FairSharder:
                         self.alpha * obs
                         + (1 - self.alpha) * self.throughput[wk])
             del self._pending[self._committed]
+            self._round_gen.pop(self._committed, None)
             self._committed += 1
             self._cv.notify_all()

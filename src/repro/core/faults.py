@@ -65,8 +65,13 @@ class Fault:
     chunk : fire on the n-th chunk event of the matching scoring pass
         (crash/stall only); ``None`` = the first.
     point : torn-write location: ``payload`` (between the vector payload
-        and the id-index append — a mid-append crash) or ``meta``
-        (payloads written, ``meta.json`` never replaced).
+        and the id-index append — a mid-append crash), ``meta``
+        (payloads written, ``meta.json`` never replaced), ``tombstone``
+        (tombstones appended, meta never replaced), or one of the
+        compaction points — ``compact_payload`` (new epoch's payload
+        written, meta still names the old epoch), ``compact_meta``
+        (catch-up appended, meta not yet replaced), ``compact_swap``
+        (meta replaced, old epoch's files not yet retired).
     stall_s : sleep duration for ``stall``.
     repeat : fire on every matching event instead of once.
     """
@@ -85,7 +90,9 @@ class Fault:
             raise ValueError(f"unknown fault kind {self.kind!r}")
         if self.phase not in ("load", "retry", "gather", "cache"):
             raise ValueError(f"unknown fault phase {self.phase!r}")
-        if self.point not in ("payload", "meta"):
+        if self.point not in ("payload", "meta", "tombstone",
+                              "compact_payload", "compact_meta",
+                              "compact_swap"):
             raise ValueError(f"unknown torn-write point {self.point!r}")
 
 
@@ -177,22 +184,34 @@ class FaultInjector:
 
     def on_cache(self, point: str) -> None:
         """Called by :class:`~repro.core.embedding_cache.EmbeddingCache`
-        between the write steps of one append; raises
-        :class:`InjectedCrash` to simulate a process dying with a torn
-        append on disk."""
+        between the write steps of one append / compaction; raises
+        :class:`InjectedCrash` (``torn_write`` — a process dying with a
+        torn write on disk) or sleeps (``stall`` with ``phase="cache"``
+        — a slow disk hanging mid-protocol while readers keep
+        serving)."""
         with self._lock:
+            hit = None
             for idx, f in enumerate(self.faults):
-                if f.kind != "torn_write" or f.point != point:
+                if f.kind == "torn_write":
+                    pass
+                elif f.kind == "stall" and f.phase == "cache":
+                    pass
+                else:
+                    continue
+                if f.point != point:
                     continue
                 if not f.repeat and idx in self._spent:
                     continue
                 self._spent.add(idx)
                 self.fired.append((f.kind, None, None, f"cache:{point}"))
+                hit = f
                 break
-            else:
-                return
-        raise InjectedCrash(f"injected torn write at cache point "
-                            f"{point!r}")
+        if hit is None:
+            return
+        if hit.kind == "torn_write":
+            raise InjectedCrash(f"injected torn write at cache point "
+                                f"{point!r}")
+        time.sleep(hit.stall_s)
 
 
 class SearchOutcome(tuple):

@@ -55,6 +55,7 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.core.fair_sharding import GenerationMismatch
 from repro.core.faults import SearchOutcome
 
 
@@ -115,29 +116,94 @@ class EvaluatorServeBackend:
     position→id mapping) to the driver's background reduce thread —
     returning a Future so the dispatcher can start the next
     micro-batch's encode/score while this one merges.
+
+    With ``live_cache`` the corpus *is* the cache's live document set
+    (generation-versioned :class:`~repro.core.embedding_cache.
+    EmbeddingCache`): each micro-batch is pinned to the newest committed
+    generation at dispatch time, a mutation committed mid-stream takes
+    effect at the next micro-batch boundary, and an in-flight
+    micro-batch finishes on the snapshot it pinned — its prepared corpus
+    (and mmap'd snapshot) is only closed once its reduce completes and a
+    newer generation has replaced it.
     """
 
     def __init__(self, evaluator, corpus, cache=None, *,
-                 device_resident: bool = True, min_batch_dim: int = 1):
+                 live_cache=None, device_resident: bool = True,
+                 min_batch_dim: int = 1):
         self.ev = evaluator
         self.min_batch_dim = min_batch_dim
         self.on_device = evaluator.args.score_impl != "numpy"
-        # the expensive pass: corpus encode / cache warm-up, once
-        self.prepared = evaluator.prepare_corpus(
-            corpus, cache=cache, device_resident=device_resident)
+        self.live_cache = live_cache
+        self._swap_lock = threading.Lock()
+        self._inflight: dict[int, int] = {}     # id(prepared) -> rounds
+        self._retired: dict[int, object] = {}   # superseded, still in flight
+        if live_cache is not None:
+            # warm the cache from the seed corpus (one committed
+            # generation when anything was missing), then serve the
+            # cache's own live set — mutations included
+            if corpus:
+                cv = evaluator._corpus_view(corpus)
+                if len(cv):
+                    evaluator.encode_corpus(np.asarray(cv.id_hashes),
+                                            cv.texts(), live_cache)
+            self.prepared = evaluator.prepare_cache_corpus(live_cache)
+        else:
+            # the expensive pass: corpus encode / cache warm-up, once
+            self.prepared = evaluator.prepare_corpus(
+                corpus, cache=cache, device_resident=device_resident)
         self.driver = evaluator.make_driver()
+
+    def _acquire(self):
+        """The prepared corpus this micro-batch scores — refreshed to the
+        newest committed cache generation at the micro-batch boundary
+        (dispatcher thread, so refresh never races another refresh)."""
+        if self.live_cache is None:
+            return self.prepared
+        with self._swap_lock:
+            cur = self.prepared
+            if self.live_cache.generation_key != cur.generation:
+                self.prepared = self.ev.prepare_cache_corpus(
+                    self.live_cache)
+                if self._inflight.get(id(cur), 0):
+                    self._retired[id(cur)] = cur   # close when drained
+                else:
+                    cur.close()
+                cur = self.prepared
+            self._inflight[id(cur)] = self._inflight.get(id(cur), 0) + 1
+            return cur
+
+    def _release(self, prepared) -> None:
+        if self.live_cache is None:
+            return
+        with self._swap_lock:
+            k = id(prepared)
+            n = self._inflight.get(k, 0) - 1
+            if n > 0:
+                self._inflight[k] = n
+                return
+            self._inflight.pop(k, None)
+            retired = self._retired.pop(k, None)
+        if retired is not None:
+            retired.close()
 
     def begin(self, texts: Sequence[str], topk: int,
               deadline_s: float | None = None) -> Future:
-        q_emb = self.ev._encode_texts(list(texts), True,
-                                      device=self.on_device,
-                                      min_batch_dim=self.min_batch_dim)
-        # per-round triple: flat corpora hand back their static members;
-        # an IVF-prepared corpus derives this micro-batch's pruned
-        # search space (top-nprobe clusters) from the query embeddings
-        sized, load_chunk, to_ids = self.prepared.round_for(q_emb)
-        inner = self.driver.search_async(q_emb, sized, load_chunk, topk,
-                                         deadline_s=deadline_s)
+        prepared = self._acquire()
+        try:
+            q_emb = self.ev._encode_texts(list(texts), True,
+                                          device=self.on_device,
+                                          min_batch_dim=self.min_batch_dim)
+            # per-round triple: flat corpora hand back their static
+            # members; an IVF-prepared corpus derives this micro-batch's
+            # pruned search space (top-nprobe clusters) from the query
+            # embeddings
+            sized, load_chunk, to_ids = prepared.round_for(q_emb)
+            inner = self.driver.search_async(
+                q_emb, sized, load_chunk, topk, deadline_s=deadline_s,
+                generation=prepared.generation)
+        except BaseException:
+            self._release(prepared)
+            raise
         outer: Future = Future()
 
         def _done(f: Future) -> None:
@@ -152,12 +218,20 @@ class EvaluatorServeBackend:
                 outer.set_result(result)
             except BaseException as exc:   # noqa: BLE001 — routed to caller
                 outer.set_exception(exc)
+            finally:
+                self._release(prepared)
 
         inner.add_done_callback(_done)
         return outer
 
     def close(self) -> None:
         self.driver.close()
+        with self._swap_lock:
+            stale = list(self._retired.values())
+            self._retired.clear()
+            stale.append(self.prepared)
+        for p in stale:
+            p.close()
 
 
 class ClusterServeBackend:
@@ -165,10 +239,20 @@ class ClusterServeBackend:
     ``launch.serve --workers N`` path.  Each micro-batch runs one full
     sharded round: every rank scores its fair shard and merges through
     the in-memory all-gather; rank 0's (identical) result is returned.
+
+    With ``live_cache`` (one cache shared by every rank) each
+    micro-batch pins one ``(generation, epoch)`` key for all W ranks
+    before the round starts, so the fair sharder's generation agreement
+    passes by construction; a rank that still lands on
+    :class:`~repro.core.fair_sharding.GenerationMismatch` (e.g. a
+    prepared corpus pinned before a mutation slipped in) re-prepares at
+    the round's agreed key and retries — the round is never consumed by
+    the losing acquire.
     """
 
     def __init__(self, evaluators, cluster, corpus, caches=None, *,
-                 device_resident: bool = True, min_batch_dim: int = 1):
+                 live_cache=None, device_resident: bool = True,
+                 min_batch_dim: int = 1):
         if len(evaluators) != cluster.world_size:
             raise ValueError(
                 f"{len(evaluators)} evaluators for a world of "
@@ -176,20 +260,66 @@ class ClusterServeBackend:
         self.evs = list(evaluators)
         self.cluster = cluster
         self.min_batch_dim = min_batch_dim
-        caches = caches if caches is not None else [None] * len(self.evs)
-        self.prepared = [
-            ev.prepare_corpus(corpus, cache=c,
-                              device_resident=device_resident)
-            for ev, c in zip(self.evs, caches)]
+        self.live_cache = live_cache
+        if live_cache is not None:
+            if corpus:
+                cv = self.evs[0]._corpus_view(corpus)
+                if len(cv):
+                    self.evs[0].encode_corpus(np.asarray(cv.id_hashes),
+                                              cv.texts(), live_cache)
+            self.prepared = [ev.prepare_cache_corpus(live_cache)
+                             for ev in self.evs]
+        else:
+            caches = (caches if caches is not None
+                      else [None] * len(self.evs))
+            self.prepared = [
+                ev.prepare_corpus(corpus, cache=c,
+                                  device_resident=device_resident)
+                for ev, c in zip(self.evs, caches)]
+
+    def _refresh(self) -> None:
+        """Pin every rank to one key — the newest committed generation —
+        at the micro-batch boundary.  Reading the key once and passing
+        it explicitly means a mutation landing mid-refresh waits for the
+        next micro-batch instead of splitting the round."""
+        key = self.live_cache.generation_key
+        for i, ev in enumerate(self.evs):
+            if self.prepared[i].generation != key:
+                old = self.prepared[i]
+                self.prepared[i] = ev.prepare_cache_corpus(
+                    self.live_cache, generation=key)
+                old.close()
+
+    def _rank_search(self, rank: int, texts, topk: int,
+                     deadline_s: float | None):
+        while True:
+            try:
+                return self.evs[rank].search_texts(
+                    texts, self.prepared[rank], topk,
+                    min_batch_dim=self.min_batch_dim,
+                    deadline_s=deadline_s)
+            except GenerationMismatch as e:
+                if self.live_cache is None:
+                    raise
+                # losing acquire: roll forward to the round's agreed
+                # snapshot and retry (the sharder did not consume the
+                # round for this worker)
+                old = self.prepared[rank]
+                self.prepared[rank] = self.evs[rank].prepare_cache_corpus(
+                    self.live_cache, generation=e.agreed)
+                old.close()
 
     def run(self, texts: Sequence[str], topk: int,
             deadline_s: float | None = None):
+        if self.live_cache is not None:
+            self._refresh()
         outs = self.cluster.run(
-            lambda rank: self.evs[rank].search_texts(
-                texts, self.prepared[rank], topk,
-                min_batch_dim=self.min_batch_dim,
-                deadline_s=deadline_s))
+            lambda rank: self._rank_search(rank, texts, topk, deadline_s))
         return outs[0]
+
+    def close(self) -> None:
+        for p in self.prepared:
+            p.close()
 
 
 # -- the frontend -------------------------------------------------------------
@@ -262,13 +392,21 @@ class ServeFrontend:
                        max_batch: int | None = None,
                        max_wait_ms: float | None = None,
                        max_queue: int | None = None,
-                       device_resident: bool = True) -> "ServeFrontend":
+                       device_resident: bool = True,
+                       live: bool = False) -> "ServeFrontend":
         """Frontend over one evaluator (knob defaults come from its
-        ``EvaluationArguments.serve_*`` / ``topk`` fields)."""
+        ``EvaluationArguments.serve_*`` / ``topk`` fields).  ``live=True``
+        serves the cache's live document set with between-micro-batch
+        generation swaps (``cache`` required; ``corpus`` just warms it)."""
+        if live and cache is None:
+            raise ValueError("live=True requires a cache")
         a = evaluator.args
         return cls(
-            EvaluatorServeBackend(evaluator, corpus, cache,
-                                  device_resident=device_resident),
+            EvaluatorServeBackend(evaluator, corpus,
+                                  None if live else cache,
+                                  live_cache=cache if live else None,
+                                  device_resident=(device_resident
+                                                   and not live)),
             topk=a.topk if topk is None else topk,
             max_batch=a.serve_max_batch if max_batch is None else max_batch,
             max_wait_ms=(a.serve_max_wait_ms if max_wait_ms is None
@@ -281,13 +419,22 @@ class ServeFrontend:
                      max_batch: int | None = None,
                      max_wait_ms: float | None = None,
                      max_queue: int | None = None,
-                     device_resident: bool = True) -> "ServeFrontend":
+                     device_resident: bool = True,
+                     live: bool = False) -> "ServeFrontend":
         """Frontend over W simulated workers (``launch.serve
-        --workers N``); knob defaults from rank 0's arguments."""
+        --workers N``); knob defaults from rank 0's arguments.
+        ``live=True`` serves the shared cache's live set (every rank
+        pins the same generation per micro-batch); the first cache in
+        ``caches`` is the shared live cache."""
+        if live and not (caches and caches[0] is not None):
+            raise ValueError("live=True requires a cache in caches[0]")
         a = evaluators[0].args
         return cls(
-            ClusterServeBackend(evaluators, cluster, corpus, caches,
-                                device_resident=device_resident),
+            ClusterServeBackend(evaluators, cluster, corpus,
+                                None if live else caches,
+                                live_cache=caches[0] if live else None,
+                                device_resident=(device_resident
+                                                 and not live)),
             topk=a.topk if topk is None else topk,
             max_batch=a.serve_max_batch if max_batch is None else max_batch,
             max_wait_ms=(a.serve_max_wait_ms if max_wait_ms is None

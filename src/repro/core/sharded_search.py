@@ -520,7 +520,8 @@ class ShardedSearchDriver:
         return heap.finalize()
 
     def _score_local(self, q_emb, n_docs, load_chunk: ChunkLoader,
-                     topk: int, deadline_s: float | None = None):
+                     topk: int, deadline_s: float | None = None,
+                     generation=None):
         """The scoring phase of one round: stream this worker's shard
         slice into a **fresh** local (Q, k) heap and report the round's
         throughput observation.  Every call builds its own
@@ -542,8 +543,13 @@ class ShardedSearchDriver:
             # The sharder-global round number also keys the resilient
             # gather and the round-tagged EMA report — stable even when
             # the caller builds a fresh driver per round (serve).
+            # ``generation`` (a prepared corpus's snapshot key) makes
+            # the round generation-agreed: a GenerationMismatch raised
+            # here propagates before any scoring, the caller re-prepares
+            # at the agreed key and retries the same round.
             round_no, bounds = self.sharder.acquire(
-                self.worker_index, int(n_docs), boundaries)
+                self.worker_index, int(n_docs), boundaries,
+                generation=generation)
         else:
             round_no = self._local_round
             self._local_round += 1
@@ -616,7 +622,8 @@ class ShardedSearchDriver:
         return heap.finalize()
 
     def search(self, q_emb, n_docs, load_chunk: ChunkLoader,
-               topk: int, deadline_s: float | None = None):
+               topk: int, deadline_s: float | None = None,
+               generation=None):
         """Run this worker's encode→score→local-top-k round, then reduce.
 
         ``n_docs`` may be an int or a sized corpus object (e.g. a lazy
@@ -629,14 +636,21 @@ class ShardedSearchDriver:
         reduce phase may spend recovering orphaned shards; past it the
         round resolves partial — a ``SearchOutcome`` with ``degraded``
         set and per-query ``coverage`` < 1 — instead of raising.
+
+        ``generation`` (optional snapshot key, W > 1 only) pins the
+        round to one corpus generation via the sharder's agreement —
+        see :meth:`FairSharder.acquire`.  A
+        :class:`~repro.core.fair_sharding.GenerationMismatch` raises
+        before any scoring or reporting, so the caller can re-prepare
+        and call again for the same round.
         """
         heap, ctx = self._score_local(q_emb, n_docs, load_chunk, topk,
-                                      deadline_s)
+                                      deadline_s, generation)
         return self._reduce(heap, ctx)
 
     def search_async(self, q_emb, n_docs, load_chunk: ChunkLoader,
-                     topk: int, deadline_s: float | None = None
-                     ) -> Future:
+                     topk: int, deadline_s: float | None = None,
+                     generation=None) -> Future:
         """Like :meth:`search`, but the reduce phase (shard gather/merge
         + host finalize) runs on a driver-owned background thread and the
         merged ``(scores, positions)`` come back as a Future.
@@ -652,7 +666,7 @@ class ShardedSearchDriver:
         bitwise identical to the synchronous path.
         """
         heap, ctx = self._score_local(q_emb, n_docs, load_chunk, topk,
-                                      deadline_s)
+                                      deadline_s, generation)
         if self._reduce_pool is None:
             self._reduce_pool = ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="shard-reduce")

@@ -40,6 +40,44 @@ _I64 = np.dtype("<i8")
 _F32 = np.dtype("<f4")
 
 
+def corpus_digest(hashes, *, seed: int = 0, train_steps: int = 40,
+                  train_batch: int = 1024, generation=None) -> str:
+    """Digest key binding a persisted index to the exact corpus it was
+    built over: the id hashes, the build knobs, and — for a mutable
+    cache-backed corpus — the cache generation.  Folding the generation
+    in means a post-mutation ``load`` returns ``None`` (rebuild) instead
+    of silently serving a permutation over a different row set.
+    ``generation`` may be an int or a cache ``(generation, epoch)`` key.
+    """
+    import hashlib
+
+    digest = hashlib.sha1(
+        np.ascontiguousarray(hashes, np.int64).tobytes()).hexdigest()[:16]
+    digest += f"-s{seed}-t{train_steps}-b{train_batch}"
+    if generation is not None:
+        if isinstance(generation, tuple):
+            gen, epoch = generation
+        else:
+            gen, epoch = generation, 0
+        digest += f"-g{int(gen)}e{int(epoch)}"
+    return digest
+
+
+def cluster_order(get_range, n_rows: int, n_clusters: int, *,
+                  seed: int = 0, train_steps: int = 40,
+                  train_batch: int = 1024) -> np.ndarray:
+    """The cluster-sorted row permutation for ``n_rows`` rows served by
+    ``get_range`` — what :meth:`EmbeddingCache.compact` takes as its
+    ``order`` so compaction rewrites live rows into the IVF layout
+    (cluster-contiguous on disk: a later index build over the compacted
+    cache streams clusters as contiguous ranges)."""
+    index = IVFIndex.build(get_range, n_rows,
+                           int(min(n_clusters, max(n_rows, 1))),
+                           seed=seed, train_steps=train_steps,
+                           train_batch=train_batch)
+    return index.perm
+
+
 def _read_exact(path: str, dtype: np.dtype, count: int):
     """Read exactly ``count`` items; ``None`` if the file is missing or
     shorter (torn write) — trailing garbage beyond ``count`` is ignored,

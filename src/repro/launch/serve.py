@@ -27,6 +27,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import threading
 import time
 
 
@@ -98,6 +99,13 @@ def main(argv=None):
     ap.add_argument("--round-deadline-s", type=float, default=5.0,
                     help="how long a round waits for a silent worker "
                          "before reassigning its shard (resilient only)")
+    ap.add_argument("--mutate", action="store_true",
+                    help="live-corpus mode: serve the embedding cache's "
+                         "generation-versioned live set while a writer "
+                         "thread adds/updates/deletes documents and runs "
+                         "one online compaction — each micro-batch pins "
+                         "the newest committed generation; in-flight "
+                         "requests finish on their pinned snapshot")
     args = ap.parse_args(argv)
     if args.chaos and not (args.resilient and args.workers > 1):
         ap.error("--chaos requires --resilient and --workers > 1")
@@ -176,20 +184,26 @@ def main(argv=None):
                                   fault_injector=injector)
                for rank in range(args.workers)]
         frontend = ServeFrontend.from_cluster(
-            evs, cluster, corpus, [cache] * args.workers)
+            evs, cluster, corpus, [cache] * args.workers,
+            live=args.mutate)
+        mut_ev = evs[0]
         label = (f"{args.workers} simulated workers"
                  + (" (resilient)" if args.resilient else ""))
     elif args.workers == 1:
         # forced single-worker baseline, even under jax.distributed
         ev = RetrievalEvaluator(eval_args, retriever, collator, params,
                                 process_index=0, process_count=1)
-        frontend = ServeFrontend.from_evaluator(ev, corpus, cache)
+        frontend = ServeFrontend.from_evaluator(ev, corpus, cache,
+                                                live=args.mutate)
+        mut_ev = ev
         label = "1 worker (forced)"
     else:
         # jax process count: 1 standalone, or W under jax.distributed —
         # the evaluator picks the ProcessAllGather transport itself
         ev = RetrievalEvaluator(eval_args, retriever, collator, params)
-        frontend = ServeFrontend.from_evaluator(ev, corpus, cache)
+        frontend = ServeFrontend.from_evaluator(ev, corpus, cache,
+                                                live=args.mutate)
+        mut_ev = ev
         label = f"{ev.process_count} process(es)"
     prep_s = time.monotonic() - t_prep
 
@@ -238,6 +252,47 @@ def main(argv=None):
         assert ids.shape == (args.batch, args.topk), ids.shape
         latencies[i] = time.monotonic() - t0
 
+    # -- live-corpus writer (--mutate): adds, updates, deletes, and one
+    # online compaction run concurrently with the request loop; serving
+    # swaps generations between micro-batches, never mid-request ---------------
+    mut_thread = None
+    mut_stats = {"adds": 0, "updates": 0, "deletes": 0, "compactions": 0}
+    gen_start = cache.generation_key
+    stop_mut = threading.Event()
+    if args.mutate:
+        doc_ids = list(corpus)
+
+        def _mutate_loop() -> None:
+            i = 0
+            # at least two iterations, so every run exercises an add, an
+            # update, a delete, and the online compaction even when the
+            # request loop finishes first
+            while i < 2 or not stop_mut.is_set():
+                new_id = f"live-doc-{i}"
+                emb = np.asarray(mut_ev._encode_texts(
+                    [f"live document {i} arriving mid serve"], False))
+                cache.cache_records([new_id], emb)
+                mut_stats["adds"] += 1
+                upd = doc_ids[i % len(doc_ids)]
+                emb = np.asarray(mut_ev._encode_texts(
+                    [corpus[upd] + f" revised {i}"], False))
+                cache.cache_records([upd], emb)
+                mut_stats["updates"] += 1
+                if i % 2 == 1:
+                    cache.delete_records([f"live-doc-{i - 1}"])
+                    mut_stats["deletes"] += 1
+                if i == 1:
+                    # online compaction: pinned readers keep serving the
+                    # retired epoch's files until their rounds drain
+                    cache.compact()
+                    mut_stats["compactions"] += 1
+                i += 1
+                stop_mut.wait(0.002)
+
+        mut_thread = threading.Thread(target=_mutate_loop,
+                                      name="serve-mutate", daemon=True)
+        mut_thread.start()
+
     t_loop = time.monotonic()
     if args.concurrency > 1:
         from concurrent.futures import ThreadPoolExecutor
@@ -248,6 +303,9 @@ def main(argv=None):
         for i in range(args.n_requests):
             submit_one(i)
     loop_s = time.monotonic() - t_loop
+    if mut_thread is not None:
+        stop_mut.set()
+        mut_thread.join()
     frontend.close()
 
     for i, lat in enumerate(latencies):
@@ -272,10 +330,25 @@ def main(argv=None):
               f"fired, {args.n_requests}/{args.n_requests} requests "
               f"resolved, {fs['degraded']} degraded, "
               f"{fs['expired']} expired")
+    if args.mutate:
+        gen_end = cache.generation_key
+        # the writer really ran: generations advanced and every request
+        # above still resolved with full-shape results (submit_one
+        # asserts), i.e. zero downtime across mutation + compaction
+        assert gen_end != gen_start, (gen_start, gen_end)
+        assert mut_stats["adds"] > 0, mut_stats
+        print(f"mutation: {mut_stats['adds']} adds, "
+              f"{mut_stats['updates']} updates, "
+              f"{mut_stats['deletes']} deletes, "
+              f"{mut_stats['compactions']} compaction(s); generation "
+              f"{gen_start} -> {gen_end}, {cache.n_live} live rows, "
+              f"{args.n_requests}/{args.n_requests} requests resolved")
     print("serving done")
     return {"label": label, "warm_s": warm_s, "prep_s": prep_s,
             "latencies_ms": [float(x) * 1e3 for x in latencies],
-            "p50_ms": p50, "p99_ms": p99, "qps": qps, "frontend": dict(fs)}
+            "p50_ms": p50, "p99_ms": p99, "qps": qps,
+            "frontend": dict(fs), "mutation": dict(mut_stats),
+            "generation": list(cache.generation_key)}
 
 
 if __name__ == "__main__":

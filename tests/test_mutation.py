@@ -1,0 +1,490 @@
+"""Live corpus mutation: the generation-versioned embedding cache
+(tombstones, last-write-wins re-cache, snapshot pinning, crash-safe
+compaction) and the snapshot-pinned search stack above it.
+
+The centerpiece is the consistency oracle: a writer thread mutates the
+cache (adds / updates / deletes / one online compaction) while searches
+run across the ``score_impl`` × W ∈ {1, 2} × {flat, ivf} matrix — every
+search result must equal a fresh evaluator run over a frozen copy of
+the exact generation it pinned (ids bitwise; scores bitwise at W = 1
+where the code path is identical, allclose across worker counts per the
+repo's cross-impl convention).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.collator import RetrievalCollator
+from repro.core.config import DataArguments, EvaluationArguments
+from repro.core.embedding_cache import EmbeddingCache
+from repro.core.evaluator import (IVFPreparedCorpus, PreparedCorpus,
+                                  RetrievalEvaluator)
+from repro.core.fair_sharding import FairSharder, GenerationMismatch
+from repro.core.serving import ClusterServeBackend, ServeFrontend
+from repro.data.table import stable_id_hash
+from repro.data.tokenizer import HashTokenizer
+from repro.index.ivf import IVFIndex, cluster_order, corpus_digest
+from repro.launch.distributed import SimulatedCluster
+
+
+def _fill(cache, n, seed=0, prefix="d"):
+    rng = np.random.default_rng(seed)
+    vecs = rng.normal(size=(n, cache.dim)).astype(np.float32)
+    ids = [f"{prefix}{i}" for i in range(n)]
+    cache.cache_records(ids, vecs)
+    return ids, vecs
+
+
+# -- cache log semantics ------------------------------------------------------
+
+
+def test_recache_is_last_write_wins(tmp_path):
+    """Re-caching an id appends a new version that wins every later
+    lookup — get, get_range/get_rows via row_plan, and snapshots (the
+    old duplicate-id path served the stale first row)."""
+    cache = EmbeddingCache(str(tmp_path / "c"), dim=8)
+    ids, vecs = _fill(cache, 6)
+    new = np.full((1, 8), 7.0, np.float32)
+    cache.cache_records(["d2"], new)
+    assert len(cache) == 7                     # log: physical append
+    assert cache.n_live == 6                   # live: d2 superseded
+    np.testing.assert_allclose(cache.get(["d2"]), new, atol=1e-2)
+    # the resolved row plan serves the NEW row for d2, old rows for rest
+    hashes = np.asarray([stable_id_hash(i) for i in ids])
+    kind, rows = cache.row_plan(hashes)
+    assert kind == "rows"
+    got = cache.get_rows(rows)
+    np.testing.assert_allclose(got[2], new[0], atol=1e-2)
+    np.testing.assert_allclose(got[0], vecs[0], atol=1e-2)
+    snap = cache.snapshot()
+    np.testing.assert_allclose(snap.get(["d2"]), new, atol=1e-2)
+    snap.close()
+
+
+def test_delete_tombstone_then_readd_resurrects(tmp_path):
+    cache = EmbeddingCache(str(tmp_path / "c"), dim=8)
+    ids, vecs = _fill(cache, 5)
+    g0 = cache.generation
+    cache.delete_records(["d1", "d3"])
+    assert cache.generation == g0 + 1
+    assert cache.n_live == 3
+    assert not cache.has(["d1"])[0]
+    with pytest.raises(KeyError, match="d1"):
+        cache.get(["d1"])
+    assert sorted(cache.live_ids().tolist()) == sorted(
+        stable_id_hash(i) for i in ("d0", "d2", "d4"))
+    # re-add after delete resurrects with the new vector
+    back = np.full((1, 8), 3.0, np.float32)
+    cache.cache_records(["d1"], back)
+    assert cache.has(["d1"])[0]
+    np.testing.assert_allclose(cache.get(["d1"]), back, atol=1e-2)
+    assert cache.n_live == 4
+    # deleting a never-cached id is a committed no-op tombstone
+    g = cache.generation
+    cache.delete_records(["ghost"])
+    assert cache.generation == g + 1
+    assert cache.n_live == 4
+
+
+def test_snapshot_pins_generation_across_mutations(tmp_path):
+    """A pinned reader never sees rows from later generations or
+    resurrected tombstones — the zero-downtime invariant."""
+    cache = EmbeddingCache(str(tmp_path / "c"), dim=8)
+    ids, vecs = _fill(cache, 6)
+    snap = cache.snapshot()
+    before_ids = snap.ids.copy()
+    before = snap.get_range(0, snap.n_live).copy()
+    # mutate underneath: delete, update, add
+    cache.delete_records(["d0"])
+    cache.cache_records(["d3"], np.full((1, 8), 9.0, np.float32))
+    cache.cache_records(["new0"], np.full((1, 8), 4.0, np.float32))
+    np.testing.assert_array_equal(snap.ids, before_ids)
+    np.testing.assert_array_equal(snap.get_range(0, snap.n_live), before)
+    assert snap.has(["d0"])[0]                 # deletion not visible
+    assert not snap.has(["new0"])[0]           # later add not visible
+    np.testing.assert_allclose(snap.get(["d3"]), vecs[3:4], atol=1e-2)
+    # a fresh snapshot sees all three mutations
+    live = cache.snapshot()
+    assert not live.has(["d0"])[0]
+    assert live.has(["new0"])[0]
+    np.testing.assert_allclose(
+        live.get(["d3"]), np.full((1, 8), 9.0), atol=1e-2)
+    snap.close()
+    live.close()
+
+
+def test_snapshot_resolves_past_generations(tmp_path):
+    cache = EmbeddingCache(str(tmp_path / "c"), dim=8)
+    _fill(cache, 4)
+    g1 = cache.generation
+    cache.delete_records(["d2"])
+    cache.cache_records(["d9"], np.ones((1, 8), np.float32))
+    old = cache.snapshot(g1)
+    assert old.generation == g1
+    assert old.has(["d2"])[0] and not old.has(["d9"])[0]
+    with pytest.raises(KeyError):
+        cache.snapshot(g1 + 1000)
+    old.close()
+
+
+def test_compaction_preserves_views_and_retires_old_epoch(tmp_path):
+    """compact() rewrites live rows into a new epoch: the logical
+    content is unchanged, pinned readers keep streaming the retired
+    epoch's files until the last pin drops, and a reopen from disk sees
+    exactly the compacted state."""
+    import os
+    path = str(tmp_path / "c")
+    cache = EmbeddingCache(path, dim=8)
+    ids, vecs = _fill(cache, 10)
+    cache.delete_records(["d4", "d7"])
+    cache.cache_records(["d1"], np.full((1, 8), 5.0, np.float32))
+    pinned = cache.snapshot()
+    want_ids = pinned.ids.copy()
+    want = pinned.get_range(0, pinned.n_live).copy()
+
+    stats = cache.compact()
+    assert cache.epoch == 1
+    assert stats["rows_after"] == 8
+    assert stats["dropped"] == 3               # 1 superseded + 2 deleted
+    # generation unchanged: compaction moves bytes, not logical content
+    assert cache.generation == pinned.generation
+    live = cache.snapshot()
+    order = np.argsort(want_ids)
+    order2 = np.argsort(live.ids)
+    np.testing.assert_array_equal(live.ids[order2], want_ids[order])
+    np.testing.assert_array_equal(
+        live.get_rows(order2), want[order])
+    # the pinned epoch-0 reader still serves its exact view
+    np.testing.assert_array_equal(pinned.get_range(0, pinned.n_live),
+                                  want)
+    assert os.path.exists(os.path.join(path, "vectors.bin"))
+    pinned.close()                             # last pin: retire epoch 0
+    assert not os.path.exists(os.path.join(path, "vectors.bin"))
+    live.close()
+
+    reopened = EmbeddingCache(path, dim=8)
+    assert reopened.epoch == 1
+    assert reopened.n_live == 8
+    np.testing.assert_allclose(
+        np.asarray(reopened.get(["d1"])), np.full((1, 8), 5.0),
+        atol=1e-2)
+    assert not reopened.has(["d4"])[0]
+
+
+def test_compact_into_ivf_cluster_order(tmp_path):
+    """compact(order=cluster_order(...)) lays live rows out
+    cluster-contiguously: the compacted scan replays the permuted rows
+    and every id still maps to its own vector."""
+    cache = EmbeddingCache(str(tmp_path / "c"), dim=8)
+    ids, vecs = _fill(cache, 32)
+    cache.delete_records(["d3"])
+    snap = cache.snapshot()
+    order = cluster_order(
+        lambda lo, hi: snap.get_range(lo, hi).astype(np.float32),
+        snap.n_live, 4, seed=0, train_steps=8, train_batch=16)
+    want_ids = snap.ids[order].copy()
+    want = snap.get_rows(order).copy()
+    snap.close()
+    cache.compact(order=order)
+    live = cache.snapshot()
+    np.testing.assert_array_equal(live.ids, want_ids)
+    np.testing.assert_array_equal(live.get_range(0, live.n_live), want)
+    live.close()
+    with pytest.raises(ValueError, match="permutation"):
+        cache.compact(order=np.zeros(cache.n_live, np.int64))
+
+
+def test_cache_records_validation_names_positions(tmp_path):
+    cache = EmbeddingCache(str(tmp_path / "c"), dim=4)
+    good = np.ones((3, 4), np.float32)
+    with pytest.raises(ValueError, match="length mismatch"):
+        cache.cache_records(["a", "b"], good)
+    with pytest.raises(ValueError, match=r"\(n, 4\)"):
+        cache.cache_records(["a"], np.ones((1, 5), np.float32))
+    bad = good.copy()
+    bad[1, 2] = np.nan
+    with pytest.raises(ValueError, match=r"positions \[1\]"):
+        cache.cache_records(["a", "b", "c"], bad)
+    bad = good.copy()
+    bad[0, 0] = np.inf
+    bad[2, 3] = -np.inf
+    with pytest.raises(ValueError, match=r"positions \[0, 2\]"):
+        cache.cache_records(["a", "b", "c"], bad)
+    # float16 cast overflow is caught too, naming the overflowing row
+    big = good.copy()
+    big[2] = 1e30
+    with pytest.raises(ValueError, match=r"positions \[2\]"):
+        cache.cache_records(["a", "b", "c"], big)
+    assert len(cache) == 0                     # nothing committed
+
+
+# -- IVF digest invalidation (satellite: generation in the digest key) --------
+
+
+def test_corpus_digest_folds_in_generation():
+    hashes = np.arange(5, dtype=np.int64)
+    base = corpus_digest(hashes)
+    g1 = corpus_digest(hashes, generation=(3, 0))
+    g2 = corpus_digest(hashes, generation=(4, 0))
+    e2 = corpus_digest(hashes, generation=(4, 1))
+    assert len({base, g1, g2, e2}) == 4
+    assert corpus_digest(hashes, generation=3) == g1
+
+
+def test_post_mutation_ivf_load_returns_none_then_rebuilds(tmp_path):
+    """A persisted index keyed to generation g must not load for g+1:
+    the deleted doc would otherwise survive in the permutation."""
+    rng = np.random.default_rng(0)
+    vecs = rng.normal(size=(20, 8)).astype(np.float32)
+    index = IVFIndex.build(lambda lo, hi: vecs[lo:hi], 20, 4,
+                           train_steps=4, train_batch=8)
+    hashes = np.arange(20, dtype=np.int64)
+    d = str(tmp_path / "ivf")
+    dig1 = corpus_digest(hashes, generation=(5, 0))
+    index.save(d, digest=dig1)
+    assert IVFIndex.load(d, expect_digest=dig1) is not None
+    dig2 = corpus_digest(hashes, generation=(6, 0))
+    assert IVFIndex.load(d, expect_digest=dig2) is None
+
+
+# -- generation agreement in the fair sharder ---------------------------------
+
+
+def test_generation_mismatch_does_not_consume_the_round():
+    sharder = FairSharder(2)
+    r0, _ = sharder.acquire(0, 100, generation=(5, 0))
+    assert r0 == 0
+    with pytest.raises(GenerationMismatch) as ei:
+        sharder.acquire(1, 100, generation=(6, 0))
+    assert ei.value.agreed == (5, 0)
+    assert ei.value.mine == (6, 0)
+    assert ei.value.round_no == 0
+    # the round was rolled back: re-acquiring at the agreed key works
+    r1, bounds = sharder.acquire(1, 100, generation=(5, 0))
+    assert r1 == 0
+    sharder.update(0, 50, 0.1, round_no=0)
+    sharder.update(1, 50, 0.1, round_no=0)
+    # round committed; the next round agrees on a fresh key
+    r, _ = sharder.acquire(0, 100, generation=(6, 0))
+    assert r == 1
+    r, _ = sharder.acquire(1, 100, generation=(6, 0))
+    assert r == 1
+
+
+def test_generation_agreement_ignored_when_unpinned():
+    sharder = FairSharder(2)
+    sharder.acquire(0, 10)
+    sharder.acquire(1, 10, generation=(1, 0))  # first *keyed* acquirer
+    sharder.update(0, 5, 0.1, round_no=0)
+    sharder.update(1, 5, 0.1, round_no=0)
+
+
+# -- the consistency oracle ---------------------------------------------------
+
+
+_ORACLE_DIM = 32
+
+
+@pytest.fixture(scope="module")
+def oracle_env(tiny_retriever, tiny_params, retrieval_data):
+    coll = RetrievalCollator(DataArguments(vocab_size=257),
+                             HashTokenizer(257))
+
+    def make(score_impl, index_impl, rank=0, world=1, gather=None,
+             sharder=None):
+        return RetrievalEvaluator(
+            EvaluationArguments(topk=5, encode_batch_size=16,
+                                score_impl=score_impl,
+                                index_impl=index_impl,
+                                ivf_nclusters=4, ivf_nprobe=2,
+                                ivf_train_steps=6, ivf_train_batch=16,
+                                serve_max_batch=8, serve_max_wait_ms=2.0),
+            tiny_retriever, coll, tiny_params,
+            process_index=rank, process_count=world,
+            gather=gather, sharder=sharder)
+
+    corpus = dict(list(retrieval_data["corpus"].items())[:48])
+    queries = list(retrieval_data["queries"].values())[:6]
+    return {"make": make, "corpus": corpus, "queries": queries}
+
+
+def _frozen_reference(ref_ev, index_impl, snap_ids, snap_vecs, texts,
+                      topk):
+    """A fresh search over a frozen copy of the pinned generation —
+    same row order, same build knobs, so the index (and therefore the
+    ranking) is reproduced exactly."""
+    n = len(snap_ids)
+    a = ref_ev.args
+    if index_impl == "ivf" and n:
+        idx = IVFIndex.build(
+            lambda lo, hi: snap_vecs[lo:hi].astype(np.float32), n,
+            int(min(a.ivf_nclusters, n)), seed=a.ivf_seed,
+            train_steps=a.ivf_train_steps, train_batch=a.ivf_train_batch)
+        prepared = IVFPreparedCorpus(
+            snap_ids, n, lambda rows: snap_vecs[rows].astype(np.float32),
+            idx, a.ivf_nprobe)
+    else:
+        prepared = PreparedCorpus(
+            snap_ids, n,
+            lambda lo, hi: snap_vecs[lo:hi].astype(np.float32))
+    return ref_ev.search_texts(texts, prepared, topk, min_batch_dim=1)
+
+
+class _Writer:
+    """Background mutator: adds, updates, deletes, and one online
+    compaction, with every committed generation's mutation recorded."""
+
+    def __init__(self, cache, ev, corpus):
+        self.cache = cache
+        self.ev = ev
+        self.texts = list(corpus.values())
+        self.stop = threading.Event()
+        self.error = None
+        self.ops = 0
+        self.thread = threading.Thread(target=self._run,
+                                       name="mutation-writer")
+
+    def _run(self):
+        try:
+            i = 0
+            while not self.stop.is_set():
+                emb = np.asarray(self.ev._encode_texts(
+                    [f"breaking news item {i}"], False))
+                self.cache.cache_records([f"live{i}"], emb)
+                emb = np.asarray(self.ev._encode_texts(
+                    [self.texts[i % len(self.texts)] + f" v{i}"], False))
+                self.cache.cache_records([f"doc{i % len(self.texts)}"],
+                                         emb)
+                if i % 2 == 1:
+                    self.cache.delete_records([f"live{i - 1}"])
+                if i == 2:
+                    self.cache.compact()
+                self.ops += 1
+                i += 1
+                time.sleep(0.002)
+        except BaseException as exc:      # noqa: BLE001 — re-raised below
+            self.error = exc
+
+    def __enter__(self):
+        self.thread.start()
+        return self
+
+    def __exit__(self, *exc):
+        self.stop.set()
+        self.thread.join()
+        if self.error is not None:
+            raise self.error
+
+
+@pytest.mark.parametrize("world", (1, 2))
+@pytest.mark.parametrize("index_impl", ("flat", "ivf"))
+@pytest.mark.parametrize("score_impl", ("numpy", "jax", "pallas_fused"))
+def test_search_under_concurrent_mutation_matches_frozen_oracle(
+        oracle_env, tmp_path, score_impl, index_impl, world):
+    """While a writer thread mutates the cache, every search must equal
+    a fresh run over a frozen copy of the generation it pinned — proof
+    that no search ever reads a torn mix of generations."""
+    cache = EmbeddingCache(str(tmp_path / "c"), dim=_ORACLE_DIM)
+    ref_ev = oracle_env["make"](score_impl, index_impl)
+    # seed the cache with the corpus (one committed generation)
+    cv = ref_ev._corpus_view(oracle_env["corpus"])
+    ref_ev.encode_corpus(np.asarray(cv.id_hashes), cv.texts(), cache)
+
+    if world == 1:
+        ev = oracle_env["make"](score_impl, index_impl)
+        cluster = None
+
+        def one_search(texts, topk):
+            prepared = ev.prepare_cache_corpus(cache)
+            try:
+                out = ev.search_texts(texts, prepared, topk,
+                                      min_batch_dim=1)
+                snap = prepared.snapshot
+                frozen = (snap.ids.copy(),
+                          snap.get_range(0, snap.n_live).copy())
+            finally:
+                prepared.close()
+            return out, frozen
+    else:
+        cluster = SimulatedCluster(world)
+        evs = [oracle_env["make"](score_impl, index_impl, rank, world,
+                                  cluster.gather, cluster.sharder)
+               for rank in range(world)]
+        backend = ClusterServeBackend(evs, cluster, {}, live_cache=cache)
+
+        def one_search(texts, topk):
+            out = backend.run(texts, topk)
+            snap = backend.prepared[0].snapshot
+            frozen = (snap.ids.copy(),
+                      snap.get_range(0, snap.n_live).copy())
+            return out, frozen
+
+    texts = oracle_env["queries"]
+    results = []
+    with _Writer(cache, ref_ev, oracle_env["corpus"]) as writer:
+        deadline = time.monotonic() + 30.0
+        while len(results) < 4 and time.monotonic() < deadline:
+            results.append(one_search(texts, 5))
+            # make sure generations actually advance between searches
+            while (writer.ops < 2 * len(results)
+                   and time.monotonic() < deadline
+                   and writer.error is None):
+                time.sleep(0.002)
+    assert len(results) >= 2
+    if world > 1:
+        backend.close()
+
+    generations = set()
+    for out, (snap_ids, snap_vecs) in results:
+        ids, vals = out
+        generations.add((len(snap_ids),
+                         hash(snap_ids.tobytes())))
+        ref_ids, ref_vals = _frozen_reference(
+            ref_ev, index_impl, snap_ids, snap_vecs, texts, 5)
+        np.testing.assert_array_equal(ids, ref_ids)
+        if world == 1:
+            # identical code path over identical bytes: bitwise
+            np.testing.assert_array_equal(vals, ref_vals)
+        else:
+            np.testing.assert_allclose(vals, ref_vals, rtol=1e-5,
+                                       atol=1e-6)
+    # the oracle exercised more than one pinned generation
+    assert len(generations) >= 2, generations
+
+
+# -- live serve frontend ------------------------------------------------------
+
+
+def test_live_frontend_swaps_generations_between_microbatches(
+        oracle_env, tmp_path):
+    """ServeFrontend(live=True): requests keep resolving while the cache
+    mutates and compacts; new documents become searchable."""
+    cache = EmbeddingCache(str(tmp_path / "c"), dim=_ORACLE_DIM)
+    ev = oracle_env["make"]("numpy", "flat")
+    fe = ServeFrontend.from_evaluator(ev, oracle_env["corpus"], cache,
+                                      live=True, max_wait_ms=1.0)
+    try:
+        q = oracle_env["queries"][0]
+        ids0, _ = fe.search(q, timeout=60)
+        assert ids0.shape == (1, 5)
+        # mutate: add a doc engineered to win for its own text
+        emb = np.asarray(ev._encode_texts(["zzz unique marker text"],
+                                          False))
+        cache.cache_records(["fresh-doc"], emb)
+        cache.compact()
+        ids1, _ = fe.search("zzz unique marker text", timeout=60)
+        assert stable_id_hash("fresh-doc") in ids1[0]
+        # delete it; the next request must not surface it
+        cache.delete_records(["fresh-doc"])
+        ids2, _ = fe.search("zzz unique marker text", timeout=60)
+        assert stable_id_hash("fresh-doc") not in ids2[0]
+    finally:
+        fe.close()
+
+
+def test_live_requires_cache():
+    with pytest.raises(ValueError, match="cache"):
+        ServeFrontend.from_evaluator(object(), {}, None, live=True)
